@@ -1,0 +1,124 @@
+"""Paper Figures 1, 11, 12 and Table 4: per-layer algorithm trade-offs,
+per-module latency under fixed-algorithm baselines vs DYNAMAP OPT, and the
+end-to-end improvement percentages.
+
+Runs the cost model on both device specs: the TPU-v5e target and the
+Alveo-U200-like spec (the paper's own regime — where the paper's algorithm
+mixes re-appear).
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter, defaultdict
+from typing import Dict, List
+
+from repro.cnn.models import googlenet, inception_v4
+from repro.core.algorithms import DEFAULT_MENU, IM2COL, KN2ROW, WINO_2_3
+from repro.core.cost_model import FPGA_LIKE, TPUSpec, V5E, node_cost
+from repro.core.dse import identify_parameters
+from repro.core.graph import ConvMeta
+from repro.core.mapper import evaluate_fixed_mapping, map_network
+
+
+def figure1(spec: TPUSpec = V5E) -> List[str]:
+    """Fig. 1: computation / memory loads of the three algorithms on three
+    representative layer configurations."""
+    rows = []
+    layers = {
+        "small-kernel 1x1 (56,256,64,1)": ConvMeta(256, 64, 56, 56, 1, 1),
+        "square 3x3 (28,192,96,3)": ConvMeta(192, 96, 28, 28, 3, 3),
+        "large 7x7 (56,64,128,7)": ConvMeta(64, 128, 56, 56, 7, 7),
+    }
+    for name, conv in layers.items():
+        for algo in DEFAULT_MENU:
+            if not algo.applicable(conv):
+                continue
+            mult = algo.multiplies(conv)
+            nc = node_cost(conv, algo, 256, 256, spec=spec)
+            rows.append(f"fig1,{name},{algo},{mult},{nc.total:.3e}")
+    return rows
+
+
+def _module_of(layer_name: str) -> str:
+    if "/" in layer_name:
+        return layer_name.split("/")[0]
+    return layer_name.split("_")[0] if "_" in layer_name else layer_name
+
+
+def figures_11_12(spec: TPUSpec, model_name: str, graph) -> List[str]:
+    """Per-module execution time under bl3/bl4/bl5/OPT (Figs. 11/12)."""
+    hw = identify_parameters(graph, spec=spec, max_dim=512)
+    plan = map_network(graph, hw=hw, spec=spec)
+    rows = []
+    # Per-module node costs under each policy (transition costs are
+    # graph-global; node costs attribute cleanly to modules).
+    policies: Dict[str, Dict[int, float]] = {}
+    from repro.core.algorithms import menu_for
+    for pol, pick in (("bl3_im2col", "im2col"), ("bl4_kn2row", "kn2row"),
+                      ("bl5_wino", "winograd")):
+        per: Dict[int, float] = {}
+        for node in graph.conv_nodes():
+            menu = menu_for(node.conv)
+            fams = [a.family.value for a in menu]
+            if pick in fams:
+                algo = menu[fams.index(pick)]
+            else:
+                algo = menu[fams.index("im2col")]
+            per[node.id] = node_cost(node.conv, algo, hw.p1, hw.p2,
+                                     hw.psi.get((node.id, algo.key)),
+                                     spec).total
+        policies[pol] = per
+    policies["OPT"] = {
+        nid: node_cost(graph.nodes[nid].conv, algo, hw.p1, hw.p2,
+                       plan.dataflows.get(nid), spec).total
+        for nid, algo in plan.assignment.items()}
+
+    by_module: Dict[str, Dict[str, float]] = defaultdict(dict)
+    for pol, per in policies.items():
+        for nid, cost in per.items():
+            mod = _module_of(graph.nodes[nid].name)
+            by_module[mod][pol] = by_module[mod].get(pol, 0.0) + cost
+    for mod in sorted(by_module):
+        row = by_module[mod]
+        rows.append(
+            f"fig11_12,{model_name},{mod},"
+            + ",".join(f"{row.get(p, 0):.3e}" for p in
+                       ("bl3_im2col", "bl4_kn2row", "bl5_wino", "OPT")))
+    return rows
+
+
+def table4(spec: TPUSpec, model_name: str, graph) -> List[str]:
+    """Table 4: end-to-end latency improvement of OPT over bl3/bl4/bl5."""
+    hw = identify_parameters(graph, spec=spec, max_dim=512)
+    plan = map_network(graph, hw=hw, spec=spec)
+    rows = [f"table4,{model_name},{spec.name},OPT_ms,"
+            f"{plan.total_cost_s * 1e3:.4f}"]
+    hist = Counter(str(a) for a in plan.assignment.values())
+    rows.append(f"table4,{model_name},{spec.name},algo_mix,"
+                + "|".join(f"{k}:{v}" for k, v in sorted(hist.items())))
+    for pol in ("im2col", "kn2row", "winograd"):
+        bl = evaluate_fixed_mapping(graph, pol, hw=hw, spec=spec)
+        imp = 100 * (1 - plan.total_cost_s / bl)
+        rows.append(f"table4,{model_name},{spec.name},improvement_vs_{pol},"
+                    f"{imp:.1f}%")
+    return rows
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    rows += figure1(V5E)
+    nets = {"googlenet": googlenet(res=224),
+            "inception_v4": inception_v4(res=299)}
+    for spec in (V5E, FPGA_LIKE):
+        for name, g in nets.items():
+            t0 = time.time()
+            rows += table4(spec, name, g)
+            rows.append(f"table4,{name},{spec.name},wall_s,"
+                        f"{time.time() - t0:.2f}")
+    for name, g in nets.items():
+        rows += figures_11_12(FPGA_LIKE, name, g)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

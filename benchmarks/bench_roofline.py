@@ -1,0 +1,35 @@
+"""§Roofline table assembly: reads experiments/roofline/*.json (probe-based
+HLO-derived terms) and experiments/dryrun/*.json (memory analysis), emits
+the per-(arch × shape) table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+EXP = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def run() -> List[str]:
+    rows = ["roofline,arch,shape,kind,compute_ms,memory_ms,collective_ms,"
+            "bound,roofline_frac,useful_flops_ratio"]
+    for f in sorted((EXP / "roofline").glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            rows.append(f"roofline,{r.get('arch')},{r.get('shape')},"
+                        f"FAILED,{r.get('error', '')[:60]}")
+            continue
+        # roofline fraction: compute term / total (how close the dominant
+        # bottleneck lets us get to the compute roofline)
+        total = r["roofline_total_s"]
+        frac = r["compute_s"] / total if total else 0.0
+        rows.append(
+            f"roofline,{r['arch']},{r['shape']},{r['kind']},"
+            f"{r['compute_s'] * 1e3:.2f},{r['memory_s'] * 1e3:.2f},"
+            f"{r['collective_s'] * 1e3:.2f},{r['bound']},"
+            f"{frac:.3f},{r['useful_flops_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

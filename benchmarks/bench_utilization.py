@@ -1,0 +1,56 @@
+"""Paper Figures 9/10: effective PE utilization (Eq. 14) per CONV layer
+under three hardware configurations:
+
+  bl1 'square-NS'     : largest square array, NS dataflow only
+  bl2 'algo1-NS'      : Algorithm-1 array shape, NS only
+  OPT 'algo1-optimized': Algorithm-1 shape + per-layer best dataflow
+
+plus the end-to-end latency deltas the paper reports (32%/35% lower for
+GoogleNet/Inception-v4 vs bl1 in their setting).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.cnn.models import googlenet, inception_v4
+from repro.core.cost_model import (Dataflow, FPGA_LIKE, TPUSpec, node_cost)
+from repro.core.dse import identify_parameters
+from repro.core.mapper import map_network
+
+
+def utilization_rows(spec: TPUSpec, model_name: str, graph,
+                     square: int = 512) -> List[str]:
+    hw = identify_parameters(graph, spec=spec, max_dim=512)
+    plan = map_network(graph, hw=hw, spec=spec)
+    rows = []
+    tot = {"bl1": 0.0, "bl2": 0.0, "opt": 0.0}
+    for node in graph.conv_nodes():
+        algo = plan.assignment[node.id]
+        # bl1: biggest square array, NS only.
+        nc1 = node_cost(node.conv, algo, square, square, Dataflow.NS, spec)
+        # bl2: DSE shape, NS only.
+        nc2 = node_cost(node.conv, algo, hw.p1, hw.p2, Dataflow.NS, spec)
+        # OPT: DSE shape + chosen dataflow.
+        nco = node_cost(node.conv, algo, hw.p1, hw.p2,
+                        plan.dataflows[node.id], spec)
+        rows.append(f"fig9_10,{model_name},{node.name},"
+                    f"{nc1.utilization:.3f},{nc2.utilization:.3f},"
+                    f"{nco.utilization:.3f}")
+        for k, nc in (("bl1", nc1), ("bl2", nc2), ("opt", nco)):
+            tot[k] += nc.total
+    for k in ("bl1", "bl2"):
+        imp = 100 * (1 - tot["opt"] / tot[k])
+        rows.append(f"fig9_10,{model_name},e2e_latency_vs_{k},,,{imp:.1f}%")
+    return rows
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    for name, g in (("googlenet", googlenet(res=224)),
+                    ("inception_v4", inception_v4(res=299))):
+        rows += utilization_rows(FPGA_LIKE, name, g)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

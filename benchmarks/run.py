@@ -1,0 +1,30 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,...`` CSV rows (μs-scale latencies are cost-model seconds ×1e6 where
+applicable; derived columns documented per module)."""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    import benchmarks.bench_algorithms as ba
+    import benchmarks.bench_dse as bd
+    import benchmarks.bench_e2e as be
+    import benchmarks.bench_roofline as br
+    import benchmarks.bench_utilization as bu
+
+    for name, mod in (("bench_algorithms", ba), ("bench_utilization", bu),
+                      ("bench_dse", bd), ("bench_e2e", be),
+                      ("bench_roofline", br)):
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness running end to end
+            rows = [f"{name},ERROR,{e!r}"]
+        print(f"# === {name} ({time.time() - t0:.1f}s) ===")
+        print("\n".join(rows))
+        print()
+
+
+if __name__ == "__main__":
+    main()

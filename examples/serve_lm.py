@@ -1,0 +1,19 @@
+"""Batched serving example (deliverable b): continuous batching through the
+serving engine with greedy decoding.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+if __name__ == "__main__":
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen2.5-14b", "--reduced",
+           "--requests", "6", "--batch", "4", "--prompt-len", "12",
+           "--max-new", "8"]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root"}
+    raise SystemExit(subprocess.call(cmd, env=env, cwd=str(REPO)))

@@ -1,0 +1,4 @@
+"""CNN substrate: executable layers, model-graph builders, executor."""
+from repro.cnn.executor import forward, init_params
+from repro.cnn.models import (MODELS, alexnet, googlenet, inception_v4,
+                              resnet18, vgg16)

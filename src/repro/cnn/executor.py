@@ -1,0 +1,91 @@
+"""Graph executor: runs a CNN under a DYNAMAP ExecutionPlan.
+
+The central Computing Unit analogy holds here too: every conv dispatches to
+the same GEMM machinery, only the algorithm wrapper differs per layer
+(algorithm switching, §3). Because all three algorithms compute the same
+convolution, executing under *any* plan must produce identical outputs —
+that invariant is what the integration tests assert.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cnn import layers as L
+from repro.core.algorithms import Algorithm, IM2COL
+from repro.core.graph import Graph, LayerKind
+from repro.core.mapper import ExecutionPlan
+
+
+def init_params(graph: Graph, key: jax.Array,
+                dtype=jnp.float32) -> Dict[int, Dict[str, jax.Array]]:
+    params: Dict[int, Dict[str, jax.Array]] = {}
+    for nid in graph.topo_order():
+        node = graph.nodes[nid]
+        if node.kind is LayerKind.CONV:
+            m = node.conv
+            key, sub = jax.random.split(key)
+            fan_in = m.k1 * m.k2 * m.c_in
+            w = jax.random.normal(sub, (m.k1, m.k2, m.c_in, m.c_out),
+                                  dtype) / jnp.sqrt(fan_in)
+            params[nid] = {"w": w}
+        elif node.kind is LayerKind.FC:
+            key, sub = jax.random.split(key)
+            fin = int(node.attrs["in_features"])
+            fout = int(node.attrs["out_features"])
+            params[nid] = {
+                "w": jax.random.normal(sub, (fin, fout), dtype) / jnp.sqrt(fin),
+                "b": jnp.zeros((fout,), dtype),
+            }
+    return params
+
+
+def forward(graph: Graph, params: Dict[int, Dict[str, jax.Array]],
+            x: jax.Array, plan: Optional[ExecutionPlan] = None,
+            default_algo: Algorithm = IM2COL,
+            use_pallas: bool = False,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Run inference. ``x``: (H, W, C) single image (the paper's no-batch
+    low-latency setting)."""
+    values: Dict[int, jax.Array] = {}
+    for nid in graph.topo_order():
+        node = graph.nodes[nid]
+        preds = graph.predecessors(nid)
+        if node.kind is LayerKind.INPUT:
+            values[nid] = x
+            continue
+        ins = [values[p] for p in preds]
+        if node.kind is LayerKind.CONV:
+            algo = (plan.assignment.get(nid, default_algo) if plan
+                    else default_algo)
+            m = node.conv
+            pad = "SAME" if m.pad == "same" else "VALID"
+            y = L.conv2d(ins[0], params[nid]["w"], algo, stride=m.stride,
+                         padding=pad, use_pallas=use_pallas,
+                         interpret=interpret)
+            values[nid] = L.relu(y)
+        elif node.kind is LayerKind.POOL_MAX:
+            pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
+            values[nid] = L.max_pool(ins[0], int(node.attrs["k"]),
+                                     int(node.attrs["stride"]), pad)
+        elif node.kind is LayerKind.POOL_AVG:
+            pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
+            values[nid] = L.avg_pool(ins[0], int(node.attrs["k"]),
+                                     int(node.attrs["stride"]), pad)
+        elif node.kind is LayerKind.CONCAT:
+            values[nid] = jnp.concatenate(ins, axis=-1)
+        elif node.kind is LayerKind.ADD:
+            values[nid] = L.relu(sum(ins))
+        elif node.kind is LayerKind.GLOBAL_POOL:
+            values[nid] = L.global_avg_pool(ins[0])[None, None, :]
+        elif node.kind is LayerKind.FC:
+            values[nid] = L.fc(ins[0], params[nid]["w"], params[nid]["b"])
+        elif node.kind is LayerKind.SOFTMAX:
+            values[nid] = jax.nn.softmax(ins[0])
+        elif node.kind is LayerKind.OUTPUT:
+            values[nid] = ins[0]
+        else:
+            raise ValueError(f"unhandled node kind {node.kind}")
+    return values[graph.sink()]

@@ -1,0 +1,20 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000 — GQA, no-bias, parallel attention+FFN block, tied embeddings
+[hf:CohereForAI/c4ai-command-r-v01; unverified]."""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22528, vocab=256000,
+    parallel_block=True, tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="command-r-35b", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256,
+    parallel_block=True, tie_embeddings=True,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,19 @@
+"""DYNAMAP core: graph IR, cost model, PBQP mapping, DSE (paper §3-§5)."""
+from repro.core.algorithms import (Algorithm, AlgoFamily, DEFAULT_MENU,
+                                   IM2COL, KN2ROW, Layout, PAPER_MENU,
+                                   WINO_2_3, WINO_4_3, menu_for)
+from repro.core.cost_model import (ALL_DATAFLOWS, Dataflow, NodeCost,
+                                   Roofline, TPUSpec, V5E, V5E_INT8,
+                                   best_dataflow, eff_bandwidth,
+                                   fits_on_chip, gemm_steps,
+                                   gemm_utilization, node_cost, roofline,
+                                   transition_cost)
+from repro.core.dse import (HardwareChoice, candidate_shapes,
+                            identify_parameters, vmem_working_set)
+from repro.core.graph import (ConvMeta, Graph, LayerKind, LayerNode,
+                              is_series_parallel)
+from repro.core.mapper import (CostGraphBuilder, ExecutionPlan,
+                               evaluate_fixed_mapping, map_network)
+from repro.core.pbqp import (PBQP, SolveResult, solve_brute_force,
+                             solve_greedy_incremental, solve_greedy_node,
+                             solve_series_parallel)

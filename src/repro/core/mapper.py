@@ -1,0 +1,354 @@
+"""DYNAMAP end-to-end mapping flow (§5): cost-graph construction + PBQP.
+
+Steps (Figure 7):
+  ① Algorithm 1 identifies (P_SA1, P_SA2) and per-(layer, algorithm) dataflow ψ;
+  ② the CNN cost graph is constructed (§5.1): conv vertices carry cost vectors
+     over algorithm choices; out-degree>1 vertices get a *store-format* split
+     vertex v_s; edges carry layout-transition matrices (Table 2);
+  ③ the PBQP solver performs the series-parallel node reductions (§4);
+  ④-⑥ the result is an ExecutionPlan the executor / codegen consumes.
+
+Construction note: the paper gives v_s a choice vector of size Σ_b'|A_b'|
+(one entry per downstream-layer algorithm). We use the equivalent compact
+form — v_s chooses among the *distinct input layouts* of downstream
+algorithms; store edges pay the layout-conversion write, load edges pay a
+matched (streaming) read when layouts agree and a converting read otherwise.
+Both formulations price exactly the same store/load legs of Table 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.algorithms import (Algorithm, AlgoFamily, DEFAULT_MENU,
+                                   IM2COL, KN2ROW, Layout, menu_for)
+from repro.core.cost_model import (Dataflow, TPUSpec, V5E, best_dataflow,
+                                   eff_bandwidth, fits_on_chip, gemm_steps,
+                                   node_cost, transition_cost)
+from repro.core.dse import HardwareChoice, identify_parameters
+from repro.core.graph import ConvMeta, Graph, LayerKind, LayerNode
+from repro.core.pbqp import (PBQP, SolveResult, solve_brute_force,
+                             solve_greedy_incremental, solve_greedy_node,
+                             solve_series_parallel)
+
+
+PASSTHROUGH = "passthrough"
+
+
+@dataclasses.dataclass
+class NodeChoices:
+    """The per-vertex choice set entering the PBQP."""
+    node_id: int
+    kind: LayerKind
+    algos: List[Algorithm]          # empty for passthrough nodes
+    labels: List[str]
+    costs: np.ndarray               # (d,)
+    dataflows: List[Optional[Dataflow]]
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    p1: int
+    p2: int
+    assignment: Dict[int, Algorithm]          # conv node → algorithm
+    dataflows: Dict[int, Dataflow]            # conv node → dataflow
+    store_formats: Dict[int, Layout]          # split producer → DRAM layout
+    total_cost_s: float
+    solver: SolveResult
+    choices: Dict[int, NodeChoices]
+
+
+def _layer_out(node: LayerNode) -> Tuple[int, int, int]:
+    """(H, W, C) of a node's output; builders annotate non-conv nodes."""
+    if node.conv is not None:
+        return (node.conv.o1, node.conv.o2, node.conv.c_out)
+    shape = node.attrs.get("out_shape")
+    if shape is None:
+        raise ValueError(f"node {node.name} missing out_shape annotation")
+    h, w, c = shape  # type: ignore[misc]
+    return int(h), int(w), int(c)
+
+
+def _passthrough_cost(node: LayerNode, spec: TPUSpec) -> float:
+    """Node cost of non-conv layers (§3.4 pooling module, adds, softmax)."""
+    h, w, c = _layer_out(node)
+    elems = h * w * c
+    if node.kind in (LayerKind.POOL_MAX, LayerKind.POOL_AVG):
+        k = int(node.attrs.get("k", 3))
+        ops = elems * k * k
+        return ops / spec.vpu_flops + elems * spec.dtype_bytes / spec.hbm_bw
+    if node.kind in (LayerKind.ADD, LayerKind.SOFTMAX, LayerKind.GLOBAL_POOL):
+        return elems / spec.vpu_flops + elems * spec.dtype_bytes / spec.hbm_bw
+    if node.kind is LayerKind.FC:
+        a = 1
+        b = int(node.attrs["in_features"])
+        c_ = int(node.attrs["out_features"])
+        # FC = single GEMM; dataflow freedom still applies.
+        _, steps = best_dataflow(a, b, c_, 128, 128)
+        return steps * (128 * 128) / spec.peak_macs \
+            + b * c_ * spec.dtype_bytes / spec.hbm_bw
+    return 0.0
+
+
+class CostGraphBuilder:
+    """§5.1 — builds the PBQP instance from a CNN graph."""
+
+    def __init__(self, graph: Graph, hw: HardwareChoice,
+                 menu: Optional[Sequence[Algorithm]] = None,
+                 spec: TPUSpec = V5E,
+                 implicit_im2col: bool = False,
+                 use_on_chip: bool = True) -> None:
+        self.graph = graph
+        self.hw = hw
+        self.menu = list(menu) if menu is not None else list(DEFAULT_MENU)
+        self.spec = spec
+        self.implicit_im2col = implicit_im2col
+        self.use_on_chip = use_on_chip
+        self.choices: Dict[int, NodeChoices] = {}
+        self.split_formats: Dict[int, List[Algorithm]] = {}
+        self._next_virtual_id = max(graph.nodes) + 1 if graph.nodes else 0
+
+    # ------------------------------------------------------------- choices
+    def _conv_choices(self, node: LayerNode) -> NodeChoices:
+        assert node.conv is not None
+        algos = menu_for(node.conv, self.menu)
+        costs, dfs, labels = [], [], []
+        for algo in algos:
+            df = self.hw.psi.get((node.id, algo.key))
+            nc = node_cost(node.conv, algo, self.hw.p1, self.hw.p2, df,
+                           self.spec)
+            costs.append(nc.total)
+            dfs.append(nc.dataflow)
+            labels.append(algo.key)
+        return NodeChoices(node.id, node.kind, algos, labels,
+                           np.asarray(costs), dfs)
+
+    def _pass_choices(self, node: LayerNode) -> NodeChoices:
+        return NodeChoices(node.id, node.kind, [], [PASSTHROUGH],
+                           np.asarray([_passthrough_cost(node, self.spec)]),
+                           [None])
+
+    # ---------------------------------------------------------- transitions
+    def _edge_matrix(self, src: LayerNode, dst: LayerNode,
+                     src_ch: NodeChoices, dst_ch: NodeChoices) -> np.ndarray:
+        """Table 2 store+load matrix between two executable vertices."""
+        sh, sw, sc = _layer_out(src)
+        m = np.zeros((len(src_ch.labels), len(dst_ch.labels)))
+        on_chip = False
+        if self.use_on_chip and dst.conv is not None:
+            on_chip = fits_on_chip(sh * sw * sc, dst.conv.in_elems, self.spec)
+        elif self.use_on_chip and dst.conv is None:
+            dh, dw, dc = _layer_out(dst)
+            on_chip = fits_on_chip(sh * sw * sc, dh * dw * dc, self.spec)
+
+        for i, s_algo in enumerate(_algos_or_default(src_ch)):
+            for j, d_algo in enumerate(_algos_or_default(dst_ch)):
+                if dst.conv is not None:
+                    m[i, j] = transition_cost(
+                        s_algo, d_algo, dst.conv, sc, self.spec,
+                        implicit_im2col=self.implicit_im2col,
+                        on_chip=on_chip)
+                else:
+                    # Non-conv consumer: 3-D tensor round trip.
+                    bytes_ = sh * sw * sc * self.spec.dtype_bytes
+                    m[i, j] = 0.0 if on_chip else 2 * bytes_ / self.spec.hbm_bw
+        return m
+
+    def _split_store_matrix(self, src: LayerNode, src_ch: NodeChoices,
+                            formats: List[Algorithm],
+                            rep_consumer: Optional[ConvMeta]) -> np.ndarray:
+        sh, sw, sc = _layer_out(src)
+        m = np.zeros((len(src_ch.labels), len(formats)))
+        for i, s_algo in enumerate(_algos_or_default(src_ch)):
+            for j, fmt in enumerate(formats):
+                if rep_consumer is not None:
+                    m[i, j] = 0.5 * transition_cost(
+                        s_algo, fmt, rep_consumer, sc, self.spec,
+                        implicit_im2col=self.implicit_im2col)
+                else:
+                    m[i, j] = sh * sw * sc * self.spec.dtype_bytes \
+                        / self.spec.hbm_bw
+        return m
+
+    def _split_load_matrix(self, formats: List[Algorithm],
+                           src: LayerNode,
+                           dst: LayerNode, dst_ch: NodeChoices) -> np.ndarray:
+        sh, sw, sc = _layer_out(src)
+        m = np.zeros((len(formats), len(dst_ch.labels)))
+        for i, fmt in enumerate(formats):
+            for j, d_algo in enumerate(_algos_or_default(dst_ch)):
+                if dst.conv is None:
+                    m[i, j] = sh * sw * sc * self.spec.dtype_bytes \
+                        / self.spec.hbm_bw
+                    continue
+                if fmt.input_layout is d_algo.input_layout and \
+                        (fmt.family is not AlgoFamily.WINOGRAD or
+                         fmt.m == d_algo.m):
+                    # Matched format → streaming load (paper's Load(n, n)).
+                    m[i, j] = 0.5 * transition_cost(
+                        fmt, d_algo, dst.conv, sc, self.spec,
+                        implicit_im2col=self.implicit_im2col)
+                else:
+                    # Converting load: pay the dst-layout bytes at the
+                    # (possibly lane-penalized) effective bandwidth.
+                    m[i, j] = transition_cost(
+                        fmt, d_algo, dst.conv, sc, self.spec,
+                        implicit_im2col=self.implicit_im2col)
+        return m
+
+    # ---------------------------------------------------------------- build
+    def build(self) -> Tuple[PBQP, Dict[int, NodeChoices]]:
+        g = self.graph
+        pbqp = PBQP()
+        for nid in g.topo_order():
+            node = g.nodes[nid]
+            ch = (self._conv_choices(node) if node.kind is LayerKind.CONV
+                  else self._pass_choices(node))
+            self.choices[nid] = ch
+            pbqp.add_node(nid, ch.costs)
+
+        for nid in g.topo_order():
+            node = g.nodes[nid]
+            succs = g.successors(nid)
+            if len(succs) <= 1:
+                for s in succs:
+                    pbqp.add_edge(nid, s, self._edge_matrix(
+                        node, g.nodes[s], self.choices[nid], self.choices[s]))
+                continue
+            # out-degree > 1 → insert the store-format vertex v_s (§5.1).
+            formats: List[Algorithm] = []
+            seen = set()
+            for s in succs:
+                for algo in _algos_or_default(self.choices[s]):
+                    key = (algo.input_layout, algo.m)
+                    if key not in seen:
+                        seen.add(key)
+                        formats.append(algo)
+            rep = next((g.nodes[s].conv for s in succs
+                        if g.nodes[s].conv is not None), None)
+            vs = self._next_virtual_id
+            self._next_virtual_id += 1
+            vs_ch = NodeChoices(vs, LayerKind.CONCAT, formats,
+                                [f"store:{a.input_layout.value}" for a in formats],
+                                np.zeros(len(formats)),
+                                [None] * len(formats))
+            self.choices[vs] = vs_ch
+            self.split_formats[nid] = formats
+            pbqp.add_node(vs, vs_ch.costs)
+            pbqp.add_edge(nid, vs, self._split_store_matrix(
+                node, self.choices[nid], formats, rep))
+            for s in succs:
+                pbqp.add_edge(vs, s, self._split_load_matrix(
+                    formats, node, g.nodes[s], self.choices[s]))
+        return pbqp, self.choices
+
+
+def _algos_or_default(ch: NodeChoices) -> List[Algorithm]:
+    """Passthrough vertices behave as 3-D-tensor producers/consumers, which
+    is exactly kn2row's layout (§3.3)."""
+    return ch.algos if ch.algos else [KN2ROW]
+
+
+# ---------------------------------------------------------------------------
+# The public flow.
+# ---------------------------------------------------------------------------
+
+def map_network(graph: Graph,
+                menu: Optional[Sequence[Algorithm]] = None,
+                spec: TPUSpec = V5E,
+                hw: Optional[HardwareChoice] = None,
+                implicit_im2col: bool = False,
+                use_on_chip: bool = True,
+                solver: str = "sp") -> ExecutionPlan:
+    """Run the full DYNAMAP flow on a CNN graph. ``solver`` ∈ {sp, brute,
+    greedy_node, greedy_incremental} — non-sp solvers exist for the paper's
+    baseline comparisons and for optimality tests."""
+    if hw is None:
+        hw = identify_parameters(graph, menu=menu, spec=spec)
+    builder = CostGraphBuilder(graph, hw, menu=menu, spec=spec,
+                               implicit_im2col=implicit_im2col,
+                               use_on_chip=use_on_chip)
+    pbqp, choices = builder.build()
+
+    if solver == "sp":
+        res = solve_series_parallel(pbqp)
+    elif solver == "brute":
+        res = solve_brute_force(pbqp)
+    elif solver == "greedy_node":
+        res = solve_greedy_node(pbqp)
+    elif solver == "greedy_incremental":
+        order = [n for n in sorted(pbqp.costs)]
+        res = solve_greedy_incremental(pbqp, order)
+    else:
+        raise ValueError(f"unknown solver {solver}")
+
+    assignment: Dict[int, Algorithm] = {}
+    dataflows: Dict[int, Dataflow] = {}
+    store_formats: Dict[int, Layout] = {}
+    for nid, ch in choices.items():
+        pick = res.assignment[nid]
+        if ch.kind is LayerKind.CONV and ch.algos:
+            assignment[nid] = ch.algos[pick]
+            df = ch.dataflows[pick]
+            dataflows[nid] = df if df is not None else Dataflow.NS
+        elif ch.labels and ch.labels[pick].startswith("store:"):
+            store_formats[nid] = ch.algos[pick].input_layout
+    return ExecutionPlan(p1=hw.p1, p2=hw.p2, assignment=assignment,
+                         dataflows=dataflows, store_formats=store_formats,
+                         total_cost_s=res.cost, solver=res, choices=choices)
+
+
+def evaluate_fixed_mapping(graph: Graph, policy: str,
+                           menu: Optional[Sequence[Algorithm]] = None,
+                           spec: TPUSpec = V5E,
+                           hw: Optional[HardwareChoice] = None,
+                           implicit_im2col: bool = False,
+                           use_on_chip: bool = True) -> float:
+    """Cost of the paper's single-algorithm baselines on the same cost graph:
+    bl3 = 'im2col', bl4 = 'kn2row' (where possible, else im2col),
+    bl5 = 'winograd' (where applicable, else im2col)."""
+    if hw is None:
+        hw = identify_parameters(graph, menu=menu, spec=spec)
+    builder = CostGraphBuilder(graph, hw, menu=menu, spec=spec,
+                               implicit_im2col=implicit_im2col,
+                               use_on_chip=use_on_chip)
+    pbqp, choices = builder.build()
+
+    assignment: Dict[int, int] = {}
+    for nid, ch in choices.items():
+        if ch.kind is LayerKind.CONV and ch.algos:
+            idx = _pick_for_policy(ch.algos, policy)
+        else:
+            # Split vertices: choose the best format greedily given the
+            # forced conv assignment is uniform — pick matched layout.
+            idx = _split_pick(ch, policy)
+        assignment[nid] = idx
+    return pbqp.total_cost(assignment)
+
+
+def _pick_for_policy(algos: List[Algorithm], policy: str) -> int:
+    fams = [a.family for a in algos]
+    if policy == "im2col":
+        return fams.index(AlgoFamily.IM2COL)
+    if policy == "kn2row":
+        if AlgoFamily.KN2ROW in fams:
+            return fams.index(AlgoFamily.KN2ROW)
+        return fams.index(AlgoFamily.IM2COL)
+    if policy == "winograd":
+        if AlgoFamily.WINOGRAD in fams:
+            return fams.index(AlgoFamily.WINOGRAD)
+        return fams.index(AlgoFamily.IM2COL)
+    raise ValueError(policy)
+
+
+def _split_pick(ch: NodeChoices, policy: str) -> int:
+    if not ch.labels or not ch.labels[0].startswith("store:"):
+        return 0
+    want = {"im2col": Layout.TOEPLITZ, "kn2row": Layout.TENSOR3D,
+            "winograd": Layout.WINOGRAD}.get(policy, Layout.TENSOR3D)
+    for i, a in enumerate(ch.algos):
+        if a.input_layout is want:
+            return i
+    return 0

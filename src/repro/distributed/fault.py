@@ -1,0 +1,154 @@
+"""Fault tolerance & straggler mitigation — the control-plane logic.
+
+This container has one real device, so the *mechanisms* (what a 1000-node
+deployment needs) are implemented as deterministic, unit-testable logic
+plus single-host drivers:
+
+  * ``HealthTracker`` — heartbeat bookkeeping; hosts that miss
+    ``max_missed`` beats are declared dead.
+  * ``ElasticPlanner`` — given the surviving host set, produce the largest
+    valid (data, model) mesh that preserves the model axis (TP must stay
+    intact; data shrinks), plus the checkpoint-restore reshard plan.
+  * ``StragglerMonitor`` — per-step duration tracking with a robust
+    z-score; persistent offenders are proposed for eviction (which then
+    flows through ElasticPlanner).
+  * ``run_with_retries`` — the supervisor loop: run step; on simulated/real
+    failure, restore from the last committed checkpoint and continue. The
+    deterministic data pipeline (pure function of step) makes the replay
+    exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat: float
+    missed: int = 0
+    alive: bool = True
+
+
+class HealthTracker:
+    def __init__(self, n_hosts: int, beat_interval_s: float = 10.0,
+                 max_missed: int = 3) -> None:
+        now = 0.0
+        self.hosts = {i: HostState(i, now) for i in range(n_hosts)}
+        self.interval = beat_interval_s
+        self.max_missed = max_missed
+
+    def beat(self, host_id: int, t: float) -> None:
+        h = self.hosts[host_id]
+        h.last_beat = t
+        h.missed = 0
+
+    def sweep(self, t: float) -> List[int]:
+        """Advance the failure detector; returns newly-dead host ids."""
+        newly_dead = []
+        for h in self.hosts.values():
+            if not h.alive:
+                continue
+            h.missed = int((t - h.last_beat) // self.interval)
+            if h.missed >= self.max_missed:
+                h.alive = False
+                newly_dead.append(h.host_id)
+        return newly_dead
+
+    def alive_hosts(self) -> List[int]:
+        return [h.host_id for h in self.hosts.values() if h.alive]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    pods: int = 1
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+class ElasticPlanner:
+    """Re-mesh policy: model (TP) axis is load-bearing — weights are
+    sharded across it — so it is preserved; the data axis shrinks to the
+    largest power-of-two supported by surviving hosts. Batch is kept by
+    raising per-device microbatches (noted in the plan)."""
+
+    def __init__(self, devices_per_host: int, model_axis: int) -> None:
+        self.devices_per_host = devices_per_host
+        self.model_axis = model_axis
+
+    def plan(self, n_alive_hosts: int, global_batch: int
+             ) -> Tuple[MeshPlan, Dict[str, int]]:
+        total = n_alive_hosts * self.devices_per_host
+        if total < self.model_axis:
+            raise RuntimeError(
+                f"{total} devices cannot host model axis {self.model_axis}")
+        data = total // self.model_axis
+        # largest power of two ≤ data (keeps collectives ring-friendly)
+        data = 2 ** int(math.log2(data)) if data else 1
+        plan = MeshPlan(data=data, model=self.model_axis)
+        micro_scale = max(1, global_batch // max(plan.data, 1))
+        return plan, {"microbatch_per_device": micro_scale,
+                      "dropped_devices": total - plan.devices}
+
+
+class StragglerMonitor:
+    """Robust per-host step-time tracking. A host is an offender when its
+    step time exceeds median + k·MAD for ``patience`` consecutive steps."""
+
+    def __init__(self, n_hosts: int, k: float = 4.0, patience: int = 3):
+        self.k = k
+        self.patience = patience
+        self.offense: Dict[int, int] = {i: 0 for i in range(n_hosts)}
+
+    def observe(self, step_times: Dict[int, float]) -> List[int]:
+        ts = sorted(step_times.values())
+        n = len(ts)
+        med = ts[n // 2]
+        mad = sorted(abs(t - med) for t in ts)[n // 2] or 1e-9
+        evict = []
+        for host, t in step_times.items():
+            if t > med + self.k * mad:
+                self.offense[host] = self.offense.get(host, 0) + 1
+                if self.offense[host] >= self.patience:
+                    evict.append(host)
+            else:
+                self.offense[host] = 0
+        return evict
+
+
+def run_with_retries(step_fn: Callable[[int], None],
+                     save_fn: Callable[[int], None],
+                     restore_fn: Callable[[], int],
+                     n_steps: int,
+                     checkpoint_every: int = 50,
+                     max_restarts: int = 3,
+                     failure_injector: Optional[Callable[[int], None]] = None
+                     ) -> Dict[str, int]:
+    """Supervisor: run ``n_steps``; on exception restore + replay.
+
+    ``restore_fn`` returns the step to resume from (last committed + 1).
+    ``failure_injector(step)`` may raise to simulate node loss (tests).
+    """
+    restarts = 0
+    step = 0
+    while step < n_steps:
+        try:
+            if failure_injector is not None:
+                failure_injector(step)
+            step_fn(step)
+            if (step + 1) % checkpoint_every == 0:
+                save_fn(step + 1)
+            step += 1
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            step = restore_fn()
+    return {"completed": step, "restarts": restarts}

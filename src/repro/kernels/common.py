@@ -1,0 +1,34 @@
+"""Shared helpers for the Pallas kernels."""
+from __future__ import annotations
+
+import os
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_to(x: jax.Array, multiples: Sequence[int]) -> jax.Array:
+    """Zero-pad each dim of ``x`` up to the given multiple (0 = leave alone)."""
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        pads.append((0, (ceil_to(dim, mult) - dim) if mult else 0))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def default_interpret() -> bool:
+    """Kernels run in interpret mode unless a real TPU backend is present.
+
+    This container is CPU-only; TPU v5e is the compilation *target*. The env
+    var REPRO_PALLAS_INTERPRET=0 forces compiled mode (on real hardware).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,49 @@
+"""Public wrapper for the implicit-GEMM im2col convolution."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import ceil_to, default_interpret
+from repro.kernels.conv_im2col.conv_im2col import conv_im2col_call
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "bo1", "bc", "interpret"))
+def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
+                padding: str = "SAME", bo1: int = 8, bc: int = 128,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Convolution via the im2col algorithm. x: (H, W, Cin),
+    w: (K1, K2, Cin, Cout) → (O1, O2, Cout)."""
+    interpret = default_interpret() if interpret is None else interpret
+    h, w_dim, c_in = x.shape
+    k1, k2, _, c_out = w.shape
+    if padding == "SAME":
+        o1, o2 = -(-h // stride), -(-w_dim // stride)
+        ph = max((o1 - 1) * stride + k1 - h, 0)
+        pw = max((o2 - 1) * stride + k2 - w_dim, 0)
+        xp = jnp.pad(x, ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2),
+                         (0, 0)))
+    else:
+        o1 = (h - k1) // stride + 1
+        o2 = (w_dim - k2) // stride + 1
+        xp = x
+    bo1 = min(bo1, o1)
+    o1p = ceil_to(o1, bo1)
+    # Extra bottom/right rows so the last block's window slices stay in
+    # bounds (they produce rows we slice off afterwards).
+    need_r = (o1p - 1) * stride + k1
+    need_c = (o2 - 1) * stride + k2
+    xp = jnp.pad(xp, ((0, max(0, need_r - xp.shape[0])),
+                      (0, max(0, need_c - xp.shape[1])), (0, 0)))
+    bc = min(bc, ceil_to(c_out, 128))
+    c_outp = ceil_to(c_out, bc)
+    wm = w.reshape(k1 * k2 * c_in, c_out)
+    wm = jnp.pad(wm, ((0, 0), (0, c_outp - c_out)))
+    out = conv_im2col_call(xp, wm, k1=k1, k2=k2, stride=stride,
+                           o1=o1p, o2=o2, bo1=bo1, bc=bc,
+                           interpret=interpret)
+    return out[:o1, :, :c_out]

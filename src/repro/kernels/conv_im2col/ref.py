@@ -1,0 +1,53 @@
+"""Oracle: spatial convolution via jax.lax plus an explicit Toeplitz
+construction matching Eq. 2 (used to validate layouts, not just values)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+             padding: str = "SAME") -> jax.Array:
+    """x: (H, W, Cin); w: (K1, K2, Cin, Cout) → (O1, O2, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out[0].astype(x.dtype)
+
+
+def toeplitz_ref(x: jax.Array, k1: int, k2: int, stride: int = 1,
+                 padding: str = "SAME") -> jax.Array:
+    """The explicit im2col matrix (O1*O2, K1*K2*Cin) of §2.1.1."""
+    h, w_, c = x.shape
+    if padding == "SAME":
+        o1 = -(-h // stride)
+        o2 = -(-w_ // stride)
+        ph = max((o1 - 1) * stride + k1 - h, 0)
+        pw = max((o2 - 1) * stride + k2 - w_, 0)
+        x = jnp.pad(x, ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2),
+                        (0, 0)))
+    else:
+        o1 = (h - k1) // stride + 1
+        o2 = (w_ - k2) // stride + 1
+    cols = []
+    for dk1 in range(k1):
+        for dk2 in range(k2):
+            sl = x[dk1:dk1 + (o1 - 1) * stride + 1:stride,
+                   dk2:dk2 + (o2 - 1) * stride + 1:stride, :]
+            cols.append(sl.reshape(o1 * o2, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv_via_toeplitz_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+                          padding: str = "SAME") -> jax.Array:
+    k1, k2, c_in, c_out = w.shape
+    t = toeplitz_ref(x, k1, k2, stride, padding)
+    out = t.astype(jnp.float32) @ w.reshape(-1, c_out).astype(jnp.float32)
+    h, w_, _ = x.shape
+    if padding == "SAME":
+        o1, o2 = -(-h // stride), -(-w_ // stride)
+    else:
+        o1 = (h - k1) // stride + 1
+        o2 = (w_ - k2) // stride + 1
+    return out.reshape(o1, o2, c_out).astype(x.dtype)

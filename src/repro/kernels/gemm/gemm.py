@@ -1,0 +1,122 @@
+"""Dataflow-switchable tiled GEMM — the paper's Computing Unit on the MXU.
+
+§3.2 of the paper binds the two physical systolic-array dims (P_SA1, P_SA2)
+to different GEMM dims per dataflow; the third dim streams:
+
+    NS: (a → P_SA1, c → P_SA2), b streams   — output-stationary
+    WS: (b → P_SA1, c → P_SA2), a streams   — weight block resident
+    IS: (b → P_SA1, a → P_SA2), c streams   — input block resident
+
+On TPU the virtual array is a Pallas block: the dataflow chooses which two
+GEMM dims carry the (p1, p2) block shape — and therefore which dims suffer
+ceil-division padding waste (Eq. 9) — while the streamed dim is tiled at the
+native 128 granularity. One kernel body serves all three; the binding
+happens in ops.py.
+
+Grid is (i, j, k) with k innermost (contiguous output-block revisits, as
+Pallas TPU requires); a VMEM f32 scratch accumulates partial products, which
+is exactly the stall-free accumulate-in-place of the paper's PE design.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; interpret mode works without a TPU present.
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
+                interpret: bool = True,
+                out_dtype=None) -> jax.Array:
+    """C = A @ B with explicit (bm, bn, bk) VMEM tiling.
+
+    Caller must pre-pad so M % bm == N % bn == K % bk == 0 (ops.py does).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (m, n, k, bm, bn, bk)
+    nk = k // bk
+    out_dtype = out_dtype or a.dtype
+
+    grid = (m // bm, n // bn, nk)
+    scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
+               else pl.ANY)  # pragma: no cover
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[scratch],
+        interpret=interpret,
+    )(a, b)
+
+
+def batched_gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int,
+                        bk: int, interpret: bool = True,
+                        out_dtype=None) -> jax.Array:
+    """C[g] = A[g] @ B[g] — used for the (m+r-1)^2 independent Winograd GEMMs
+    (Eq. 6): the transform-space Hadamard products batched over tile position."""
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    out_dtype = out_dtype or a.dtype
+
+    def kernel(a_ref, b_ref, o_ref, acc_ref):
+        kk = pl.program_id(3)
+
+        @pl.when(kk == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(kk == nk - 1)
+        def _flush():
+            o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+    scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
+               else pl.ANY)  # pragma: no cover
+    return pl.pallas_call(
+        kernel,
+        grid=(g, m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
+        scratch_shapes=[scratch],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,71 @@
+"""Jit'd public wrapper: dataflow → block-dim binding (Eq. 9), padding,
+and the interpret/compile switch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import Dataflow
+from repro.kernels.common import ceil_to, default_interpret, pad_to
+from repro.kernels.gemm.gemm import batched_gemm_pallas, gemm_pallas
+
+_STREAM_TILE = 128   # native MXU granularity on the streamed dim
+
+
+def dataflow_blocks(dataflow: Dataflow, p1: int, p2: int
+                    ) -> Tuple[int, int, int]:
+    """(bm, bn, bk) binding for a given dataflow — §3.2 mapping.
+
+    NS: (a→p1, c→p2) ⇒ blocks on (M, N), K streams at 128.
+    WS: (b→p1, c→p2) ⇒ blocks on (K, N), M streams at 128.
+    IS: (b→p1, a→p2) ⇒ blocks on (K, M), N streams at 128.
+    """
+    if dataflow is Dataflow.NS:
+        return p1, p2, _STREAM_TILE
+    if dataflow is Dataflow.WS:
+        return _STREAM_TILE, p2, p1
+    return p2, _STREAM_TILE, p1
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dataflow", "p1", "p2", "interpret", "out_dtype"))
+def gemm(a: jax.Array, b: jax.Array,
+         dataflow: Dataflow = Dataflow.NS,
+         p1: int = 128, p2: int = 128,
+         interpret: Optional[bool] = None,
+         out_dtype=None) -> jax.Array:
+    """C = A @ B on the dataflow-switchable Computing Unit."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = dataflow_blocks(dataflow, p1, p2)
+    bm, bn, bk = min(bm, ceil_to(m, 8)), min(bn, ceil_to(n, 128)), \
+        min(bk, ceil_to(k, 128))
+    ap = pad_to(a, (bm, bk))
+    bp = pad_to(b, (bk, bn))
+    out = gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                      out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dataflow", "p1", "p2", "interpret", "out_dtype"))
+def batched_gemm(a: jax.Array, b: jax.Array,
+                 dataflow: Dataflow = Dataflow.NS,
+                 p1: int = 128, p2: int = 128,
+                 interpret: Optional[bool] = None,
+                 out_dtype=None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    g, m, k = a.shape
+    _, _, n = b.shape
+    bm, bn, bk = dataflow_blocks(dataflow, p1, p2)
+    bm, bn, bk = min(bm, ceil_to(m, 8)), min(bn, ceil_to(n, 128)), \
+        min(bk, ceil_to(k, 128))
+    ap = pad_to(a, (0, bm, bk))
+    bp = pad_to(b, (0, bk, bn))
+    out = batched_gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret, out_dtype=out_dtype)
+    return out[:, :m, :n]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(out_dtype)
+
+
+def batched_gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
+                      b.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,122 @@
+"""kn2row convolution: K1·K2 unit-conv GEMMs + Pad-and-Accumulate (§2.1.2).
+
+Phase 1 ("unit-CONV GEMM", Eq. 3): each (k1, k2) kernel offset is a 1×1
+convolution — a (H1H2, Cin) × (Cin, Cout) GEMM. We run all K1K2 of them as
+one batched Pallas GEMM whose input block index map ignores the batch
+coordinate, so the feature-map block is fetched once and stays VMEM-resident
+across offsets (the paper's pipelining of the two phases).
+
+Phase 2 ("Pad-and-Accumulate", Eq. 4): each intermediate patch p_{k1,k2} is
+shifted by its offset w.r.t. the center patch and Hadamard-added. The Pallas
+kernel walks the K1K2 patches with the output block resident in VMEM
+(contiguous revisits), which is the accumulation-buffer design of §3.1 —
+bank conflicts become a non-issue because the partial sums never leave VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 — unit-conv GEMMs, batched over kernel offsets.
+# ---------------------------------------------------------------------------
+
+def unit_conv_gemms(x2d: jax.Array, w: jax.Array, *, bm: int, bn: int,
+                    bk: int, interpret: bool = True) -> jax.Array:
+    """x2d: (H1H2, Cin); w: (K1K2, Cin, Cout) → p: (K1K2, H1H2, Cout)."""
+    m, k = x2d.shape
+    g, k2, n = w.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+
+    def kernel(x_ref, w_ref, o_ref, acc_ref):
+        kk = pl.program_id(3)
+
+        @pl.when(kk == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(kk == nk - 1)
+        def _flush():
+            o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+    scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
+               else pl.ANY)  # pragma: no cover
+    return pl.pallas_call(
+        kernel,
+        grid=(g, m // bm, n // bn, nk),
+        in_specs=[
+            # Note: index map ignores g → the X block is re-used across all
+            # K1K2 unit convolutions without re-fetch.
+            pl.BlockSpec((bm, bk), lambda gg, i, j, kk: (i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), x2d.dtype),
+        scratch_shapes=[scratch],
+        interpret=interpret,
+    )(x2d, w)
+
+
+# ---------------------------------------------------------------------------
+# Phase 2 — Pad-and-Accumulate.
+# ---------------------------------------------------------------------------
+
+def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
+                   stride: int = 1, pad_top: int = 0, pad_left: int = 0,
+                   interpret: bool = True) -> jax.Array:
+    """p: (K1K2, H1p, H2p, Cout) — patches already zero-padded so that the
+    (k1, k2) shift is a pure dynamic_slice; returns (O1, O2, Cout).
+
+    Eq. 4: z[y, x] = Σ_{k1,k2} p_{k1,k2}[S·y + k1 - pt, S·x + k2 - pl],
+    realized as slice(start=(k1, k2)) on the padded patch tensor.
+    """
+    g, h1p, h2p, c = p.shape
+    assert g == k1 * k2
+    span_r = (o1 - 1) * stride + 1
+    span_c = (o2 - 1) * stride + 1
+    assert h1p >= span_r + k1 - 1 and h2p >= span_c + k2 - 1, \
+        (p.shape, span_r, span_c)
+
+    def kernel(p_ref, o_ref, acc_ref):
+        gg = pl.program_id(0)
+
+        @pl.when(gg == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        dk1 = gg // k2
+        dk2 = gg % k2
+        patch = p_ref[0]                              # (H1p, H2p, C)
+        sl = jax.lax.dynamic_slice(patch, (dk1, dk2, 0), (span_r, span_c, c))
+        acc_ref[...] += sl[::stride, ::stride, :].astype(jnp.float32)
+
+        @pl.when(gg == g - 1)
+        def _flush():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    scratch = (pltpu.VMEM((o1, o2, c), jnp.float32) if _VMEM is not None
+               else pl.ANY)  # pragma: no cover
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, h1p, h2p, c), lambda gg: (gg, 0, 0, 0))],
+        out_specs=pl.BlockSpec((o1, o2, c), lambda gg: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o1, o2, c), p.dtype),
+        scratch_shapes=[scratch],
+        interpret=interpret,
+    )(p)

@@ -1,0 +1,52 @@
+"""Public wrapper: full kn2row convolution = batched unit-conv GEMMs
+(Pallas) + pad-and-accumulate (Pallas)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import ceil_to, default_interpret
+from repro.kernels.kn2row.kn2row import pad_accumulate, unit_conv_gemms
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "bm", "bn", "interpret"))
+def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
+                padding: str = "SAME", bm: int = 128, bn: int = 128,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Convolution via kn2row. x: (H, W, Cin), w: (K1, K2, Cin, Cout)."""
+    interpret = default_interpret() if interpret is None else interpret
+    h, w_dim, c_in = x.shape
+    k1, k2, _, c_out = w.shape
+    if padding == "SAME":
+        o1, o2 = -(-h // stride), -(-w_dim // stride)
+        ph = max((o1 - 1) * stride + k1 - h, 0)
+        pw = max((o2 - 1) * stride + k2 - w_dim, 0)
+        pt, pl_ = ph // 2, pw // 2
+    else:
+        o1 = (h - k1) // stride + 1
+        o2 = (w_dim - k2) // stride + 1
+        pt = pl_ = 0
+
+    # Phase 1: (H*W, Cin) @ (K1K2, Cin, Cout).
+    m = h * w_dim
+    bm_ = min(bm, ceil_to(m, 8))
+    bn_ = min(bn, ceil_to(c_out, 128))
+    bk_ = min(512, ceil_to(c_in, 128))
+    mp, np_, kp = ceil_to(m, bm_), ceil_to(c_out, bn_), ceil_to(c_in, bk_)
+    x2d = jnp.pad(x.reshape(m, c_in), ((0, mp - m), (0, kp - c_in)))
+    wk = jnp.pad(w.reshape(k1 * k2, c_in, c_out),
+                 ((0, 0), (0, kp - c_in), (0, np_ - c_out)))
+    p = unit_conv_gemms(x2d, wk, bm=bm_, bn=bn_, bk=bk_,
+                        interpret=interpret)          # (K1K2, mp, np_)
+    p = p[:, :m, :].reshape(k1 * k2, h, w_dim, np_)
+
+    # Phase 2: zero-pad so every (k1,k2) shift is a plain slice, then
+    # accumulate on-chip.
+    p = jnp.pad(p, ((0, 0), (pt, k1), (pl_, k2), (0, 0)))
+    out = pad_accumulate(p, k1=k1, k2=k2, o1=o1, o2=o2, stride=stride,
+                         interpret=interpret)
+    return out[:, :, :c_out]

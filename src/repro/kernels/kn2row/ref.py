@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for kn2row (Eq. 3 + Eq. 4), independent of lax.conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kn2row_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               padding: str = "SAME") -> jax.Array:
+    """x: (H, W, Cin); w: (K1, K2, Cin, Cout)."""
+    h, w_dim, c_in = x.shape
+    k1, k2, _, c_out = w.shape
+    if padding == "SAME":
+        o1, o2 = -(-h // stride), -(-w_dim // stride)
+        ph = max((o1 - 1) * stride + k1 - h, 0)
+        pw = max((o2 - 1) * stride + k2 - w_dim, 0)
+        pt, pl_ = ph // 2, pw // 2
+    else:
+        o1 = (h - k1) // stride + 1
+        o2 = (w_dim - k2) // stride + 1
+        pt = pl_ = 0
+    # Phase 1: unit convs p_{k1,k2} = X · W[k1,k2]  (Eq. 3) at input res.
+    x32 = x.astype(jnp.float32)
+    acc = jnp.zeros((o1, o2, c_out), jnp.float32)
+    # Phase 2: shift + Hadamard-add (Eq. 4).
+    xp = jnp.pad(x32, ((pt, k1), (pl_, k2), (0, 0)))
+    for dk1 in range(k1):
+        for dk2 in range(k2):
+            p = xp @ w[dk1, dk2].astype(jnp.float32)       # (Hp, Wp, Cout)
+            sl = p[dk1:dk1 + (o1 - 1) * stride + 1:stride,
+                   dk2:dk2 + (o2 - 1) * stride + 1:stride, :]
+            acc = acc + sl
+    return acc.astype(x.dtype)

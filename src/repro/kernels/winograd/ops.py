@@ -1,0 +1,80 @@
+"""Public Winograd conv: transforms (Pallas) + batched GEMM (Pallas),
+with the multi-round decomposition for kernels larger than r×r."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import ceil_to, default_interpret
+from repro.kernels.gemm.ops import batched_gemm
+from repro.kernels.winograd.winograd import (input_transform, matrices,
+                                             output_transform,
+                                             transform_kernel_weights)
+
+
+def _conv_f_mr(x: jax.Array, w: jax.Array, m: int, o1: int, o2: int,
+               pt: int, pl_: int, interpret: bool) -> jax.Array:
+    """Single-round F(m,r) same-stride-1 conv core; x unpadded (H, W, Cin)."""
+    r = w.shape[0]
+    t = m + r - 1
+    h, w_dim, c_in = x.shape
+    c_out = w.shape[-1]
+    ty, tx = -(-o1 // m), -(-o2 // m)
+    need_r, need_c = ty * m + r - 1, tx * m + r - 1
+    xp = jnp.pad(x, ((pt, max(0, need_r - h - pt)),
+                     (pl_, max(0, need_c - w_dim - pl_)), (0, 0)))
+    v = input_transform(xp, m=m, r=r, tiles_y=ty, tiles_x=tx,
+                        interpret=interpret)          # (T², n_tiles, Cin)
+    u = transform_kernel_weights(w, m, r).astype(x.dtype)  # (T², Cin, Cout)
+    mm = batched_gemm(v, u, interpret=interpret,
+                      out_dtype=x.dtype)              # (T², n_tiles, Cout)
+    y = output_transform(mm, m=m, r=r, tiles_y=ty, tiles_x=tx,
+                         interpret=interpret)
+    return y[:o1, :o2, :c_out]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "padding", "interpret"))
+def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
+                  padding: str = "SAME",
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Winograd convolution, stride 1, square K×K kernels.
+
+    K > r runs in ceil(K/r)² rounds of shifted r×r sub-kernels with output
+    accumulation (§6.1.2's K1K2/r² rounds).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    r = 3
+    k1, k2, c_in, c_out = w.shape
+    assert k1 == k2, "winograd path requires square kernels"
+    h, w_dim, _ = x.shape
+    if padding == "SAME":
+        o1, o2 = h, w_dim
+        pt_full = (k1 - 1) // 2
+        pl_full = (k2 - 1) // 2
+    else:
+        o1, o2 = h - k1 + 1, w_dim - k2 + 1
+        pt_full = pl_full = 0
+
+    if k1 == r:
+        return _conv_f_mr(x, w, m, o1, o2, pt_full, pl_full, interpret)
+
+    # Multi-round: pad kernel to multiple of r and accumulate shifted rounds.
+    rounds = -(-k1 // r)
+    kp = rounds * r
+    wp = jnp.pad(w, ((0, kp - k1), (0, kp - k2), (0, 0), (0, 0)))
+    # out[y, x] = Σ_{ry,rx} Σ_{i,j<r} X[y+ry·r+i-pt, x+rx·r+j-pl]·W[ry·r+i, ...]
+    # = Σ_rounds  F(m,r)-conv of X shifted by (ry·r, rx·r) with sub-kernel.
+    xbig = jnp.pad(x, ((pt_full, kp), (pl_full, kp), (0, 0)))
+    acc = jnp.zeros((o1, o2, c_out), x.dtype)
+    for ry in range(rounds):
+        for rx in range(rounds):
+            sub = wp[ry * r:(ry + 1) * r, rx * r:(rx + 1) * r]
+            xs = jax.lax.dynamic_slice(
+                xbig, (ry * r, rx * r, 0),
+                (o1 + r - 1, o2 + r - 1, c_in))
+            # VALID conv of xs with sub gives exactly (o1, o2).
+            acc = acc + _conv_f_mr(xs, sub, m, o1, o2, 0, 0, interpret)
+    return acc

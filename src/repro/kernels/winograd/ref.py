@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for Winograd F(m,r) — a direct transcription of Eq. 5/6."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.winograd.winograd import matrices
+
+
+def winograd_ref(x: jax.Array, w: jax.Array, m: int = 2,
+                 padding: str = "SAME") -> jax.Array:
+    """x: (H, W, Cin); w: (r, r, Cin, Cout), stride 1.
+
+    Y = Aᵀ [ (G g Gᵀ) ⊙ (Bᵀ d B) ] A, reduced over C_in in transform space
+    (the amortization noted under Eq. 5), tiles concatenated back.
+    """
+    r = w.shape[0]
+    assert w.shape[0] == w.shape[1], "winograd oracle needs square kernels"
+    bt, g_mat, at = (jnp.asarray(a) for a in matrices(m, r))
+    t = m + r - 1
+    h, w_dim, c_in = x.shape
+    c_out = w.shape[-1]
+    if padding == "SAME":
+        o1, o2 = h, w_dim
+        pt = (r - 1) // 2
+        pl_ = (r - 1) // 2
+    else:
+        o1, o2 = h - r + 1, w_dim - r + 1
+        pt = pl_ = 0
+    ty, tx = -(-o1 // m), -(-o2 // m)
+    # pad so every tile slice is in range
+    need_r = ty * m + r - 1
+    need_c = tx * m + r - 1
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((pt, max(0, need_r - h - pt)),
+                  (pl_, max(0, need_c - w_dim - pl_)), (0, 0)))
+    u = jnp.einsum("ti,ijco,uj->tuco", g_mat, w.astype(jnp.float32), g_mat)
+    ys = []
+    for iy in range(ty):
+        row = []
+        for ix in range(tx):
+            d = xp[iy * m:iy * m + t, ix * m:ix * m + t, :]
+            v = jnp.einsum("ti,ijc,uj->tuc", bt, d, bt)
+            m_ = jnp.einsum("tuc,tuco->tuo", v, u)
+            y = jnp.einsum("mt,tuo,nu->mno", at, m_, at)
+            row.append(y)
+        ys.append(jnp.concatenate(row, axis=1))
+    out = jnp.concatenate(ys, axis=0)[:o1, :o2, :]
+    return out.astype(x.dtype)

@@ -1,0 +1,150 @@
+"""Winograd F(m,r) convolution kernels (§2.1.3, Eq. 5/6).
+
+Pipeline (the paper's Linear Transform Modules → Pallas kernels):
+  1. input transform   V[ξν, tile, c]  = (Bᵀ d B)           — Pallas kernel
+  2. kernel transform  U[ξν, c, k]     = (G g Gᵀ)           — precomputed
+     (amortized across inferences, exactly as the FPGA design pre-loads it)
+  3. (m+r-1)² independent GEMMs M = V·U (Eq. 6)             — batched Pallas GEMM
+  4. output transform  Y = Aᵀ M A, tiles scattered back      — Pallas kernel
+
+Layouts follow §3.3: V and M live in the "scattered" Winograd layout
+(T², n_tiles, C) — elements at the same intra-tile position adjacent — so
+the GEMM batch dim is the intra-tile coordinate (ξ, ν).
+
+Kernels larger than r×r run in ceil(K1/r)·ceil(K2/r) rounds of shifted
+r×r sub-kernels, accumulating outputs — §6.1.2's "K1K2/3² rounds of
+Winograd ... resulting in severe transformation overheads" is exactly this
+path, and the cost model prices it the same way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------------------
+# Transform matrices (Lavin & Gray). F(2,3) uses only ±1, ±1/2 — the paper
+# notes these reduce to shift-adds on FPGA; on TPU they are VPU constants.
+# ---------------------------------------------------------------------------
+
+_BT = {
+    (2, 3): np.array([[1, 0, -1, 0],
+                      [0, 1, 1, 0],
+                      [0, -1, 1, 0],
+                      [0, 1, 0, -1]], np.float32),
+    (4, 3): np.array([[4, 0, -5, 0, 1, 0],
+                      [0, -4, -4, 1, 1, 0],
+                      [0, 4, -4, -1, 1, 0],
+                      [0, -2, -1, 2, 1, 0],
+                      [0, 2, -1, -2, 1, 0],
+                      [0, 4, 0, -5, 0, 1]], np.float32),
+}
+_G = {
+    (2, 3): np.array([[1, 0, 0],
+                      [0.5, 0.5, 0.5],
+                      [0.5, -0.5, 0.5],
+                      [0, 0, 1]], np.float32),
+    (4, 3): np.array([[1 / 4, 0, 0],
+                      [-1 / 6, -1 / 6, -1 / 6],
+                      [-1 / 6, 1 / 6, -1 / 6],
+                      [1 / 24, 1 / 12, 1 / 6],
+                      [1 / 24, -1 / 12, 1 / 6],
+                      [0, 0, 1]], np.float32),
+}
+_AT = {
+    (2, 3): np.array([[1, 1, 1, 0],
+                      [0, 1, -1, -1]], np.float32),
+    (4, 3): np.array([[1, 1, 1, 1, 1, 0],
+                      [0, 1, -1, 2, -2, 0],
+                      [0, 1, 1, 4, 4, 0],
+                      [0, 1, -1, 8, -8, 1]], np.float32),
+}
+
+
+def matrices(m: int, r: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    if (m, r) not in _BT:
+        raise ValueError(f"F({m},{r}) not supported; have {_BT.keys()}")
+    return _BT[(m, r)], _G[(m, r)], _AT[(m, r)]
+
+
+def transform_kernel_weights(w: jax.Array, m: int, r: int) -> jax.Array:
+    """U[ξν, Cin, Cout] = G g Gᵀ — the offline kernel transform."""
+    _, g_mat, _ = matrices(m, r)
+    g_ = jnp.asarray(g_mat)
+    # w: (r, r, Cin, Cout) → (T, T, Cin, Cout) → (T², Cin, Cout)
+    u = jnp.einsum("ti,ijco,uj->tuco", g_, w.astype(jnp.float32), g_)
+    t = m + r - 1
+    return u.reshape(t * t, *w.shape[2:])
+
+
+# ---------------------------------------------------------------------------
+# 1. Input transform: d tiles → V (scattered layout).
+# ---------------------------------------------------------------------------
+
+def input_transform(x: jax.Array, *, m: int, r: int, tiles_y: int,
+                    tiles_x: int, interpret: bool = True) -> jax.Array:
+    """x: (Hp, Wp, C) padded so Hp ≥ tiles_y·m + r - 1 (same for W).
+    Returns V: (T², tiles_y·tiles_x, C)."""
+    t = m + r - 1
+    hp, wp, c = x.shape
+    bt_host = jnp.asarray(matrices(m, r)[0])
+
+    def kernel(x_ref, bt_ref, v_ref):
+        i = pl.program_id(0)          # tile row
+        xx = x_ref[...]               # full map in VMEM
+        bt = bt_ref[...]
+        row0 = i * m
+        tiles = []
+        for tx in range(tiles_x):     # static unroll over tile columns
+            d = jax.lax.dynamic_slice(xx, (row0, tx * m, 0), (t, t, c))
+            tiles.append(d)
+        d_all = jnp.stack(tiles, axis=0).astype(jnp.float32)  # (tx, t, t, c)
+        v = jnp.einsum("ti,xijc,uj->tuxc", bt, d_all, bt)
+        v_ref[...] = v.reshape(t * t, tiles_x, c).astype(v_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(tiles_y,),
+        in_specs=[pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((t, t), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((t * t, tiles_x, c), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t * t, tiles_y * tiles_x, c),
+                                       x.dtype),
+        interpret=interpret,
+    )(x, bt_host)
+
+
+# ---------------------------------------------------------------------------
+# 4. Output transform: M (scattered) → spatial Y.
+# ---------------------------------------------------------------------------
+
+def output_transform(m_arr: jax.Array, *, m: int, r: int, tiles_y: int,
+                     tiles_x: int, interpret: bool = True) -> jax.Array:
+    """m_arr: (T², tiles_y·tiles_x, Cout) → (tiles_y·m, tiles_x·m, Cout)."""
+    t = m + r - 1
+    tt, n_tiles, c = m_arr.shape
+    assert tt == t * t and n_tiles == tiles_y * tiles_x
+    at_host = jnp.asarray(matrices(m, r)[2])
+
+    def kernel(m_ref, at_ref, y_ref):
+        at = at_ref[...]
+        blk = m_ref[...].astype(jnp.float32)      # (T², tiles_x, C)
+        mm = blk.reshape(t, t, tiles_x, c)
+        y = jnp.einsum("mi,ijxc,nj->xmnc", at, mm, at)  # (tiles_x, m, m, c)
+        y_ref[...] = y.transpose(1, 0, 2, 3).reshape(
+            m, tiles_x * m, c).astype(y_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(tiles_y,),
+        in_specs=[pl.BlockSpec((t * t, tiles_x, c), lambda i: (0, i, 0)),
+                  pl.BlockSpec((m, t), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((m, tiles_x * m, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles_y * m, tiles_x * m, c),
+                                       m_arr.dtype),
+        interpret=interpret,
+    )(m_arr, at_host)

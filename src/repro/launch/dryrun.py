@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against 512 placeholder host devices, record memory_analysis /
+cost_analysis / collective bytes for §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # every cell
+"""
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shapes_for
+from repro.distributed.api import (activation_policy, policy_from_mesh)
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        data_axes, params_shardings,
+                                        replicated)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (input_specs, make_opt_config, model_shapes,
+                                opt_shapes, prefill_step, serve_step,
+                                train_step)
+
+RESULT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str):
+    """Sum operand sizes of every collective op in the optimized HLO.
+
+    Operand shapes appear inline in the op's argument list; the eventual
+    result shape is the first typed token on the line — we count operands
+    (falling back to the result for fused/variadic forms).
+    """
+    per_op = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*[a-z0-9\[\],\s()]*?\s([a-z-]+)\(", stripped)
+        op = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in stripped or f"{c}-start(" in stripped \
+                    or f"{c}-done(" in stripped:
+                op = c
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in stripped:
+            continue  # counted at -start
+        shapes = _SHAPE_RE.findall(stripped)
+        if not shapes:
+            continue
+        # first match(es) before the op name are result types; operands
+        # follow inside the parens. Split on the op occurrence.
+        idx = stripped.find(op + "(")
+        if idx == -1:
+            idx = stripped.find(op + "-start(")
+        operand_part = stripped[idx:] if idx >= 0 else stripped
+        operand_shapes = _SHAPE_RE.findall(operand_part)
+        use = operand_shapes if operand_shapes else shapes[:1]
+        per_op[op] += sum(_shape_bytes(d, s) for d, s in use)
+        counts[op] += 1
+    total = sum(per_op.values())
+    return total, per_op, counts
+
+
+def _spec_leaves(tree):
+    return jax.tree.leaves(tree)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULT_DIR, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    t0 = time.time()
+
+    params_sds = model_shapes(cfg)
+    # Serving-sharding strategy: decode wants weights RESIDENT (model-axis
+    # TP only) — per-step FSDP re-gathers dominate the decode collective
+    # term. Keep FSDP only when the bf16 weights don't fit 14 GB/chip at
+    # TP=16 (llama4-400b, deepseek-236b).
+    resident = (shape.kind == "decode"
+                and cfg.param_count() * 2 / 16 <= 14e9)
+    p_sh = params_shardings(params_sds, mesh, fsdp=not resident)
+    specs = input_specs(cfg, shape)
+
+    with mesh, activation_policy(
+            policy_from_mesh(mesh, seq_parallel=shape.kind != "decode")):
+        if shape.kind == "train":
+            opt_sds = opt_shapes(cfg, params_sds)
+            o_sh = params_shardings(opt_sds, mesh)
+            b_sh = batch_shardings(specs, mesh)
+            n_data = 1
+            for a in data_axes(mesh):
+                n_data *= mesh.shape[a]
+            micro = max(1, min(16, shape.global_batch // n_data))
+            fn = functools.partial(train_step, cfg=cfg,
+                                   opt_cfg=make_opt_config(cfg),
+                                   microbatches=micro)
+            jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None))
+            lowered = jitted.lower(params_sds, opt_sds, specs)
+        elif shape.kind == "prefill":
+            b_sh = batch_shardings(specs, mesh)
+            fn = functools.partial(prefill_step, cfg=cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                             out_shardings=replicated(mesh))
+            lowered = jitted.lower(params_sds, specs)
+        else:  # decode
+            c_sh = cache_shardings(specs["cache"], mesh)
+            tok_sh = batch_shardings({"tokens": specs["tokens"]},
+                                     mesh)["tokens"]
+            fn = functools.partial(serve_step, cfg=cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, c_sh,
+                                               replicated(mesh)),
+                             out_shardings=(replicated(mesh), c_sh))
+            lowered = jitted.lower(params_sds, specs["tokens"],
+                                   specs["cache"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_in_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+
+    hlo = compiled.as_text()
+    coll_total, coll_by_op, coll_counts = collective_bytes(hlo)
+
+    n_dev = mesh.devices.size
+    # Per-device parameter/optimizer bytes from the sharding specs.
+    def sharded_bytes(sds_tree, sh_tree):
+        total = 0
+        for sds, sh in zip(jax.tree.leaves(sds_tree),
+                           jax.tree.leaves(sh_tree)):
+            shard_elems = 1
+            spec = sh.spec
+            for i, dim in enumerate(sds.shape):
+                ax = spec[i] if i < len(spec) else None
+                if ax is None:
+                    shard_elems *= dim
+                else:
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    size = 1
+                    for a in axes:
+                        size *= mesh.shape[a]
+                    shard_elems *= -(-dim // size)
+            total += shard_elems * sds.dtype.itemsize
+        return total
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "n_devices": n_dev,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_total": cost.get("flops"),
+        "bytes_accessed_total": cost.get("bytes accessed"),
+        "cost_analysis_keys": sorted(cost)[:40],
+        "memory_analysis": mem_d,
+        "collective_bytes_total": coll_total,
+        "collective_bytes_by_op": coll_by_op,
+        "collective_op_counts": coll_counts,
+        "param_bytes_per_device": sharded_bytes(params_sds, p_sh),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "ok": True,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    fname.write_text(json.dumps(result, indent=2, default=str))
+    if verbose:
+        print(f"[OK] {arch} × {shape_name} × {mesh_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={cost.get('flops', 0):.3g} "
+              f"coll={coll_total/1e9:.2f}GB", flush=True)
+        print("  memory_analysis:", mem_d, flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            cfg = get_config(arch)
+            for shp in shapes_for(cfg):
+                for mp in ((False, True) if args.mesh == "both"
+                           else ((args.mesh == "multipod"),)):
+                    cells.append((arch, shp.name, mp))
+    else:
+        assert args.arch and args.shape
+        meshes = ((False, True) if args.mesh == "both"
+                  else ((args.mesh == "multipod"),))
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    for arch, shp, mp in cells:
+        mesh_name = "multipod_2x16x16" if mp else "pod_16x16"
+        fname = RESULT_DIR / f"{arch}__{shp}__{mesh_name}.json"
+        if args.skip_existing and fname.exists():
+            prev = json.loads(fname.read_text())
+            if prev.get("ok"):
+                print(f"[skip] {arch} × {shp} × {mesh_name}", flush=True)
+                continue
+        try:
+            run_cell(arch, shp, mp)
+        except Exception as e:  # record failure for triage
+            failures += 1
+            RESULT_DIR.mkdir(parents=True, exist_ok=True)
+            fname.write_text(json.dumps({
+                "arch": arch, "shape": shp, "mesh": mesh_name, "ok": False,
+                "error": repr(e),
+                "traceback": traceback.format_exc()[-4000:]}, indent=2))
+            print(f"[FAIL] {arch} × {shp} × {mesh_name}: {e!r}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

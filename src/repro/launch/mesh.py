@@ -1,0 +1,20 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod: (pod=2,
+    data=16, model=16) = 512 chips; the pod axis composes with data for
+    gradient reduction (hierarchical: reduce-scatter in-pod over ICI, then
+    inter-pod all-reduce over DCI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the same axis names, for CPU tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Roofline-term extraction (deliverable g).
+
+XLA's cost_analysis counts while-loop bodies once, so full-size compiles
+undercount per-layer work. We therefore compile two PROBE variants of every
+(arch × shape) cell — n_units and 2·n_units scan units — with
+REPRO_FULL_UNROLL=1 (every lax.scan unrolled → every iteration counted),
+and recover
+
+    per_unit = probe(2u) − probe(u)          (exact per-layer terms)
+    base     = probe(u) − per_unit           (embed + CE + caches)
+    total    = base + n_units_full · per_unit
+
+for FLOPs, HBM bytes and collective bytes. Probes run on the production
+16×16 mesh with microbatches=1 (same per-step math).
+
+Terms (per chip, TPU v5e):
+    compute_s    = flops / 197e12
+    memory_s     = hbm_bytes / 819e9
+    collective_s = collective_bytes / 50e9 (per-link)
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shapes_for
+from repro.configs.base import BlockType, ModelConfig, ShapeSpec
+from repro.distributed.api import activation_policy, policy_from_mesh
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        params_shardings, replicated)
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (input_specs, make_opt_config, model_shapes,
+                                opt_shapes, prefill_step, serve_step,
+                                train_step)
+
+RESULT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "roofline"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def scan_unit(cfg: ModelConfig) -> int:
+    """Layers per scan step (group size)."""
+    if cfg.block_type is BlockType.MAMBA and cfg.attn_every:
+        return cfg.attn_every
+    if cfg.moe is not None and cfg.moe_every > 1:
+        return cfg.moe_every
+    return 1
+
+
+def probe_cfg(cfg: ModelConfig, units: int) -> ModelConfig:
+    return dataclasses.replace(cfg, n_layers=units * scan_unit(cfg))
+
+
+def compile_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    params_sds = model_shapes(cfg)
+    # Serving-sharding strategy: decode wants weights RESIDENT (model-axis
+    # TP only) — per-step FSDP re-gathers dominate the decode collective
+    # term. Keep FSDP only when the bf16 weights don't fit 14 GB/chip at
+    # TP=16 (llama4-400b, deepseek-236b).
+    resident = (shape.kind == "decode"
+                and cfg.param_count() * 2 / 16 <= 14e9)
+    p_sh = params_shardings(params_sds, mesh, fsdp=not resident)
+    specs = input_specs(cfg, shape)
+    with mesh, activation_policy(
+            policy_from_mesh(mesh, seq_parallel=shape.kind != "decode")):
+        if shape.kind == "train":
+            opt_sds = opt_shapes(cfg, params_sds)
+            o_sh = params_shardings(opt_sds, mesh)
+            b_sh = batch_shardings(specs, mesh)
+            fn = functools.partial(train_step, cfg=cfg,
+                                   opt_cfg=make_opt_config(cfg),
+                                   microbatches=1)
+            lowered = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                              out_shardings=(p_sh, o_sh, None)
+                              ).lower(params_sds, opt_sds, specs)
+        elif shape.kind == "prefill":
+            b_sh = batch_shardings(specs, mesh)
+            fn = functools.partial(prefill_step, cfg=cfg)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                              out_shardings=replicated(mesh)
+                              ).lower(params_sds, specs)
+        else:
+            c_sh = cache_shardings(specs["cache"], mesh)
+            tok_sh = batch_shardings({"tokens": specs["tokens"]},
+                                     mesh)["tokens"]
+            fn = functools.partial(serve_step, cfg=cfg)
+            lowered = jax.jit(fn, in_shardings=(p_sh, tok_sh, c_sh,
+                                                replicated(mesh)),
+                              out_shardings=(replicated(mesh), c_sh)
+                              ).lower(params_sds, specs["tokens"],
+                                      specs["cache"],
+                                      jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered.compile()
+
+
+def probe_terms(cfg: ModelConfig, shape: ShapeSpec, units: int, mesh):
+    c = compile_cell(probe_cfg(cfg, units), shape, mesh)
+    cost = c.cost_analysis() or {}
+    coll, by_op, counts = collective_bytes(c.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll),
+        "coll_by_op": by_op,
+    }
+
+
+def analyze_cell(arch: str, shape_name: str) -> dict:
+    os.environ["REPRO_FULL_UNROLL"] = "1"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    n_units_full = cfg.n_layers // scan_unit(cfg)
+    t0 = time.time()
+    r1 = probe_terms(cfg, shape, 1, mesh)
+    r2 = probe_terms(cfg, shape, 2, mesh)
+    per_unit = {k: r2[k] - r1[k] for k in ("flops", "bytes", "coll")}
+    base = {k: r1[k] - per_unit[k] for k in per_unit}
+    total = {k: max(0.0, base[k]) + n_units_full * max(0.0, per_unit[k])
+             for k in per_unit}
+
+    # Per-chip roofline terms (cost_analysis is per-device SPMD module).
+    compute_s = total["flops"] / PEAK_FLOPS
+    memory_s = total["bytes"] / HBM_BW
+    collective_s = total["coll"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bound = max(terms, key=terms.get).replace("_s", "")
+
+    # MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE); decode D = new tokens.
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * cfg.active_param_count() * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * cfg.active_param_count() * tokens
+    model_flops_per_chip = model_flops / 256
+    hlo_flops = total["flops"]
+    ratio = model_flops_per_chip / hlo_flops if hlo_flops else float("nan")
+
+    out = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "n_units": n_units_full,
+        "per_unit": per_unit, "base": base, "total": total,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bound": bound,
+        "roofline_total_s": max(compute_s, memory_s, collective_s),
+        "model_flops_per_chip": model_flops_per_chip,
+        "hlo_flops_per_chip": hlo_flops,
+        "useful_flops_ratio": ratio,
+        "probe_wall_s": round(time.time() - t0, 1),
+        "ok": True,
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    RESULT_DIR.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shp in shapes_for(get_config(arch)):
+                cells.append((arch, shp.name))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch, shp in cells:
+        fname = RESULT_DIR / f"{arch}__{shp}.json"
+        if args.skip_existing and fname.exists() and \
+                json.loads(fname.read_text()).get("ok"):
+            print(f"[skip] {arch} × {shp}", flush=True)
+            continue
+        try:
+            r = analyze_cell(arch, shp)
+            fname.write_text(json.dumps(r, indent=2))
+            print(f"[OK] {arch} × {shp}: bound={r['bound']} "
+                  f"compute={r['compute_s']*1e3:.2f}ms "
+                  f"mem={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms "
+                  f"ratio={r['useful_flops_ratio']:.2f} "
+                  f"[{r['probe_wall_s']}s]", flush=True)
+        except Exception as e:
+            fname.write_text(json.dumps(
+                {"arch": arch, "shape": shp, "ok": False, "error": repr(e),
+                 "traceback": traceback.format_exc()[-3000:]}, indent=2))
+            print(f"[FAIL] {arch} × {shp}: {e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Serving driver: batched requests through the continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \
+      --requests 6 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import init_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch_size=args.batch,
+                           max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=args.prompt_len).astype(np.int32)
+        engine.submit(Request(rid=rid, prompt=prompt,
+                              max_new_tokens=args.max_new))
+    out = engine.run_until_done()
+    dt = time.time() - t0
+    total_new = sum(len(v) for v in out.values())
+    for rid in sorted(out):
+        print(f"request {rid}: {out[rid]}")
+    print(f"{args.requests} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s, batch={args.batch})")
+
+
+if __name__ == "__main__":
+    main()

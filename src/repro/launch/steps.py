@@ -1,0 +1,114 @@
+"""Jittable train / serve step functions and dry-run input specs."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import (decode_step, forward, init_cache, init_model,
+                                loss_fn, logits_from_hidden, prefill)
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+                               init_opt_state)
+
+PyTree = Any
+
+
+def make_opt_config(cfg: ModelConfig, total_steps: int = 10000) -> AdamWConfig:
+    return AdamWConfig(state_dtype=cfg.opt_dtype, total_steps=total_steps)
+
+
+def train_step(params: PyTree, opt_state: OptState,
+               batch: Dict[str, jax.Array], *, cfg: ModelConfig,
+               opt_cfg: AdamWConfig, microbatches: int = 1
+               ) -> Tuple[PyTree, OptState, Dict[str, jax.Array]]:
+    """One optimizer step, optionally microbatched.
+
+    Microbatching bounds the live activation set to one microbatch (the
+    64-layer × 12k-wide archs need this to stay under 16 GB/chip) and lets
+    XLA overlap each microbatch's gradient reduce-scatter with the next
+    microbatch's compute — the classic accumulation/overlap trick.
+    """
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, dict(metrics, loss=loss, **opt_metrics)
+
+    mb_batch = jax.tree.map(
+        lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                            *x.shape[1:]), batch)
+
+    def body(acc, batch_mb):
+        acc_g, acc_loss, acc_ce = acc
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch_mb, cfg)
+        acc_g = jax.tree.map(
+            lambda a, g: a + g.astype(a.dtype) / microbatches, acc_g, grads)
+        return (acc_g, acc_loss + loss / microbatches,
+                acc_ce + metrics["ce"] / microbatches), None
+
+    acc_dt = jnp.dtype(opt_cfg.state_dtype)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    (grads, loss, ce), _ = jax.lax.scan(
+        body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        mb_batch)
+    params, opt_state, opt_metrics = apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+    return params, opt_state, dict(loss=loss, ce=ce, **opt_metrics)
+
+
+def prefill_step(params: PyTree, batch: Dict[str, jax.Array], *,
+                 cfg: ModelConfig) -> jax.Array:
+    return prefill(params, batch["tokens"], cfg,
+                   batch.get("frontend_embeds"))
+
+
+def serve_step(params: PyTree, tokens: jax.Array, cache: PyTree,
+               pos: jax.Array, *, cfg: ModelConfig
+               ) -> Tuple[jax.Array, PyTree]:
+    """One decode step: new token for every sequence in the batch."""
+    return decode_step(params, tokens, cache, pos, cfg)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (no allocation) for every model input.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Dry-run inputs for the given (arch × shape) cell.
+
+    train/prefill: {'tokens': (B, S_text) i32 [, 'frontend_embeds']}
+    decode:        {'tokens': (B, 1) i32, 'pos': scalar i32, 'cache': pytree}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    n_front = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s - n_front), jnp.int32)}
+        if n_front:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_front, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: cache holds `s` tokens of context, one new token comes in.
+    cache = jax.eval_shape(functools.partial(init_cache, cfg, b, s))
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def model_shapes(cfg: ModelConfig) -> PyTree:
+    """Parameter ShapeDtypeStructs without allocating."""
+    return jax.eval_shape(functools.partial(init_model, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_shapes(cfg: ModelConfig, params_sds: PyTree) -> PyTree:
+    return jax.eval_shape(
+        functools.partial(init_opt_state, cfg=make_opt_config(cfg)),
+        params_sds)

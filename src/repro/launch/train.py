@@ -1,0 +1,109 @@
+"""End-to-end training driver.
+
+CPU-runnable example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --reduced \
+      --steps 50 --batch 8 --seq 128
+
+On a real cluster the same driver runs with --mesh pod/multipod (the mesh
+helper builds the production meshes) and the checkpoint manager provides
+restart/elastic-resume; the supervisor loop retries through failures.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.distributed.api import activation_policy, policy_from_mesh
+from repro.distributed.fault import run_with_retries
+from repro.distributed.sharding import batch_shardings, params_shardings
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.steps import make_opt_config, train_step
+from repro.models.model import init_model
+from repro.optim.adamw import init_opt_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", choices=["smoke", "pod", "multipod"],
+                    default="smoke")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = (make_smoke_mesh() if args.mesh == "smoke"
+            else make_production_mesh(multi_pod=args.mesh == "multipod"))
+    opt_cfg = make_opt_config(cfg, total_steps=args.steps)
+    dcfg = DataConfig(global_batch=args.batch, seq_len=args.seq)
+
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params, opt_cfg)
+    p_sh = params_shardings(params, mesh)
+    o_sh = params_shardings(opt_state, mesh)
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(opt_state, o_sh)
+
+    mgr = CheckpointManager(Path(args.ckpt_dir) / cfg.name)
+    start_step = 0
+    if args.resume and mgr.latest_step() is not None:
+        (params, opt_state), extra = mgr.restore(
+            (params, opt_state), shardings=(p_sh, o_sh))
+        start_step = int(extra.get("step", mgr.latest_step()))
+        print(f"resumed from step {start_step}")
+
+    step_jit = jax.jit(
+        functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                          microbatches=args.microbatches),
+        in_shardings=(p_sh, o_sh, None),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1))
+
+    state = {"params": params, "opt": opt_state}
+
+    def one_step(step: int) -> None:
+        batch = make_batch(dcfg, cfg, step, mesh)
+        t0 = time.time()
+        with mesh, activation_policy(policy_from_mesh(mesh)):
+            state["params"], state["opt"], metrics = step_jit(
+                state["params"], state["opt"], batch)
+        if step % args.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"dt {time.time() - t0:6.2f}s", flush=True)
+
+    def save(step: int) -> None:
+        mgr.save(step, (state["params"], state["opt"]),
+                 extra={"step": step})
+
+    def restore() -> int:
+        (state["params"], state["opt"]), extra = mgr.restore(
+            (state["params"], state["opt"]), shardings=(p_sh, o_sh))
+        return int(extra["step"])
+
+    stats = run_with_retries(one_step, save, restore,
+                             n_steps=args.steps,
+                             checkpoint_every=args.ckpt_every)
+    mgr.wait()
+    print(f"done: {stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,321 @@
+"""Attention: GQA/MHA with RoPE, sliding-window, chunked-softmax (flash
+style) prefill/train, KV-cache decode, and DeepSeek-V2 MLA (decompress-per-
+chunk prefill; absorbed-matmul decode).
+
+The chunked online-softmax keeps the (Sq × Skv) score matrix out of memory:
+scores exist only per (Sq × chunk) block inside a lax.scan — this is what
+lets the 32k-prefill cells compile within HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import (constrain_decode_q, constrain_qkv)
+from repro.models.scan_util import scan as _uscan
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import (Params, apply_rope, init_linear, linear,
+                                 rmsnorm)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init.
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None:
+        return _init_mla(key, cfg, dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(k2, d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(k3, d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(k4, h * hd, d, dtype=dtype),
+    }
+
+
+def _init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(key, 6)
+    q_in = m.q_lora_rank or d
+    p: Params = {
+        # joint compressed KV + shared rope key: d → kv_lora + rope
+        "w_dkv": init_linear(keys[0], d, m.kv_lora_rank + m.qk_rope_dim,
+                             dtype=dtype),
+        "w_uk": init_linear(keys[1], m.kv_lora_rank, h * m.qk_nope_dim,
+                            dtype=dtype),
+        "w_uv": init_linear(keys[2], m.kv_lora_rank, h * m.v_dim,
+                            dtype=dtype),
+        "wq": init_linear(keys[3], q_in, h * (m.qk_nope_dim + m.qk_rope_dim),
+                          dtype=dtype),
+        "wo": init_linear(keys[4], h * m.v_dim, d, dtype=dtype),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = init_linear(keys[5], d, m.q_lora_rank, dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core.
+# ---------------------------------------------------------------------------
+
+def _chunk_scan(q: jax.Array, k_chunks: jax.Array, v_chunks: jax.Array,
+                q_pos: jax.Array, k_pos_chunks: jax.Array,
+                window: int, scale: float) -> jax.Array:
+    """q: (B, Sq, H, D); k/v_chunks: (n, B, C, KvH, Dk/Dv);
+    k_pos_chunks: (n, C). Causal (+ optional sliding window)."""
+    b, sq, h, dq = q.shape
+    n, _, c, kvh, dv = v_chunks.shape
+    rep = h // kvh
+    q32 = (q * scale).astype(q.dtype)
+
+    def body(carry, xs):
+        m_prev, l_prev, o_prev = carry
+        k_c, v_c, kp = xs                                 # (B,C,KvH,D), (C,)
+        if rep > 1:
+            k_c = jnp.repeat(k_c, rep, axis=2)
+            v_c = jnp.repeat(v_c, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, k_c,
+                       preferred_element_type=jnp.float32)
+        msk = kp[None, :] > q_pos[:, None]                # future → mask
+        if window > 0:
+            msk = msk | (q_pos[:, None] - kp[None, :] >= window)
+        s = jnp.where(msk[None, None], NEG_INF, s)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        o_new = o_prev * alpha + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, h, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    o0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    # Recompute-in-backward (flash-attention semantics): per-chunk scores/
+    # probabilities are never saved.
+    (m, l, o), _ = _uscan(jax.checkpoint(body), (m0, l0, o0),
+                          (k_chunks, v_chunks, k_pos_chunks))
+    out = o / jnp.maximum(l, 1e-20)
+    return out.transpose(0, 2, 1, 3)                      # (B, Sq, H, Dv)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_offset: int = 0, window: int = 0,
+                      chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KvH, D); causal."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    c = min(chunk, skv)
+    n = -(-skv // c)
+    pad = n * c - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_pos = jnp.concatenate([jnp.arange(skv),
+                             jnp.full((pad,), 2 ** 30)]) if pad \
+        else jnp.arange(skv)
+    kc = k.reshape(b, n, c, *k.shape[2:]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, c, *v.shape[2:]).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(n, c)
+    q_pos = q_offset + jnp.arange(sq)
+    scale = q.shape[-1] ** -0.5
+    return _chunk_scan(q, kc, vc, q_pos, kpc, window, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train/prefill) and decode.
+# ---------------------------------------------------------------------------
+
+def attention_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                      q_offset: int = 0,
+                      return_cache: bool = False
+                      ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d) → (B, S, d); optionally the KV cache for serving."""
+    if cfg.mla is not None:
+        return _mla_forward(p, x, cfg, q_offset, return_cache)
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, hd)
+    k = linear(p["wk"], x).reshape(b, s, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, s, kvh, hd)
+    pos = q_offset + jnp.arange(s)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q, k, v = constrain_qkv(q, k, v)
+    out = chunked_attention(q, k, v, q_offset=q_offset,
+                            window=cfg.sliding_window)
+    out = linear(p["wo"], out.reshape(b, s, h * hd).astype(x.dtype))
+    cache = {"k": k, "v": v} if return_cache else None
+    return out, cache
+
+
+def attention_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                     pos: jax.Array, cfg: ModelConfig
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d); cache k/v: (B, S, KvH, D) ring-buffer
+    (S = window for SWA archs, full context otherwise); pos: scalar count of
+    tokens already in context."""
+    if cfg.mla is not None:
+        return _mla_decode(p, x, cache, pos, cfg)
+    b, _, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_cache = cache["k"].shape[1]
+    q = linear(p["wq"], x).reshape(b, 1, h, hd)
+    k_new = linear(p["wk"], x).reshape(b, 1, kvh, hd)
+    v_new = linear(p["wv"], x).reshape(b, 1, kvh, hd)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[None], cfg.rope_theta)
+    slot = jnp.mod(pos, s_cache)        # ring buffer (wraps only for SWA)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    # Positions of cache slots (ring-aware): slot i holds token
+    # pos - ((slot - i) mod S)  for filled slots.
+    idx = jnp.arange(s_cache)
+    tok_pos = pos - jnp.mod(slot - idx, s_cache)
+    valid = tok_pos >= 0
+    if h // kvh > 1:
+        k_r = jnp.repeat(k, h // kvh, axis=2)
+        v_r = jnp.repeat(v, h // kvh, axis=2)
+    else:
+        k_r, v_r = k, v
+    scale = hd ** -0.5
+    k_r = apply_rope_cache(k_r)
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", (q * scale), k_r,
+                    preferred_element_type=jnp.float32)
+    msk = ~valid
+    if cfg.sliding_window > 0:
+        msk = msk | (pos - tok_pos >= cfg.sliding_window)
+    s_ = jnp.where(msk[None, None, None, :], NEG_INF, s_)
+    w_ = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w_.astype(v_r.dtype), v_r)
+    out = linear(p["wo"], o.reshape(b, 1, h * hd))
+    return out, {"k": k, "v": v}
+
+
+def apply_rope_cache(k: jax.Array) -> jax.Array:
+    """Cache stores post-RoPE keys (positions are absolute), so this is the
+    identity; kept as an explicit hook for rope-rescaling schemes."""
+    return k
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2).
+# ---------------------------------------------------------------------------
+
+def _mla_q(p: Params, x: jax.Array, cfg: ModelConfig, pos) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    xq = linear(p["w_dq"], x) if "w_dq" in p else x
+    q = linear(p["wq"], xq).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_forward(p: Params, x: jax.Array, cfg: ModelConfig, q_offset: int,
+                 return_cache: bool):
+    """Prefill/train: decompress K/V per chunk inside the scan (the latent
+    cache never expands to full per-head K/V in memory at once)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    pos = q_offset + jnp.arange(s)
+    q_nope, q_rope = _mla_q(p, x, cfg, pos)
+    ckv_full = linear(p["w_dkv"], x)             # (B, S, kv_lora + rope)
+    c_kv, k_rope = ckv_full[..., :m.kv_lora_rank], \
+        ckv_full[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+
+    chunk = min(1024, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    k_pos = (jnp.concatenate([pos, jnp.full((pad,), 2 ** 30)]) if pad
+             else pos).reshape(n, chunk)
+    ckv_c = c_kv.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    krope_c = k_rope.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_dim)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_pos = pos
+
+    def body(carry, xs):
+        m_prev, l_prev, o_prev = carry
+        ckv_i, kr_i, kp = xs
+        k_nope = jnp.einsum("bkl,lhd->bkhd", ckv_i, w_uk)   # decompress
+        v_i = jnp.einsum("bkl,lhd->bkhd", ckv_i, w_uv)
+        s_ = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, kr_i,
+                           preferred_element_type=jnp.float32)) * scale
+        msk = kp[None, :] > q_pos[:, None]
+        s_ = jnp.where(msk[None, None], NEG_INF, s_)
+        m_new = jnp.maximum(m_prev, s_.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        pw = jnp.exp(s_ - m_new)
+        l_new = l_prev * alpha + pw.sum(axis=-1, keepdims=True)
+        o_new = o_prev * alpha + jnp.einsum(
+            "bhqk,bkhd->bhqd", pw.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, h, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+    o0 = jnp.zeros((b, h, s, m.v_dim), jnp.float32)
+    (mx, l, o), _ = _uscan(jax.checkpoint(body), (m0, l0, o0),
+                           (ckv_c, krope_c, k_pos))
+    out = (o / jnp.maximum(l, 1e-20)).transpose(0, 2, 1, 3)
+    out = linear(p["wo"], out.reshape(b, s, h * m.v_dim).astype(x.dtype))
+    cache = None
+    if return_cache:
+        cache = {"c_kv": c_kv[:, :s], "k_rope": k_rope[:, :s]}
+    return out, cache
+
+
+def _mla_decode(p: Params, x: jax.Array, cache, pos, cfg: ModelConfig):
+    """Absorbed-matmul decode: scores via q̃ = W_uk^T q_nope against the
+    latent cache — the cache stays (kv_lora + rope)-wide (paper's 93.3%
+    KV-cache reduction is this)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    s_cache = cache["c_kv"].shape[1]
+    q_nope, q_rope = _mla_q(p, x, cfg, pos[None])
+    ckv_full = linear(p["w_dkv"], x)
+    c_new, kr_new = ckv_full[..., :m.kv_lora_rank], \
+        ckv_full[..., m.kv_lora_rank:]
+    kr_new = apply_rope(kr_new[..., None, :], pos[None],
+                        cfg.rope_theta)[..., 0, :]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new,
+                                          (0, pos, 0))
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_dim)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)    # (B,1,H,kv_lora)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s_ = (jnp.einsum("bqhl,bkl->bhqk", q_abs, c_kv,
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                       preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(s_cache) <= pos
+    s_ = jnp.where(~valid[None, None, None, :], NEG_INF, s_)
+    w_ = jax.nn.softmax(s_, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", w_.astype(c_kv.dtype), c_kv)
+    o = jnp.einsum("bqhl,lhd->bqhd", o_lat, w_uv)
+    out = linear(p["wo"], o.reshape(b, 1, h * m.v_dim))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

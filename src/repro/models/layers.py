@@ -1,0 +1,110 @@
+"""LM primitives: norms, RoPE, MLPs, embeddings — pure-functional params.
+
+Parameters are nested dicts of arrays; every init_* returns (params, key).
+Naming is stable and descriptive because sharding rules match on path names
+(repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- linear
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.bfloat16, scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., ::2], x32[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLP
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, d_ff, dtype=dtype),
+        "up": init_linear(k2, d, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    """SwiGLU (the default for all assigned archs)."""
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x))
+                  * linear(p["up"], x))
+
+
+# ------------------------------------------------------------ embeddings
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"table": _normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Logits in fp32 for a stable softmax-CE."""
+    return x.astype(jnp.float32) @ p["table"].T.astype(jnp.float32)

@@ -1,0 +1,431 @@
+"""Model assembly: block composition, scan-over-layers stack, losses,
+prefill/decode entry points — one code path serving all 10 architectures.
+
+Layer parameters are stacked on a leading L axis and consumed by lax.scan
+(small HLO → tractable 512-device compiles); hybrid (Zamba-style) stacks
+scan over groups of ``attn_every`` mamba layers followed by ONE shared
+attention+MLP block whose parameters are closed over (not scanned) — the
+"shared attn" of the assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_util import scan as _scan
+
+from repro.configs.base import BlockType, ModelConfig
+from repro.distributed.api import (constrain_residual,
+                                   gather_layer_params)
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models.layers import (Params, embed, init_embedding, init_linear,
+                                 init_mlp, init_rmsnorm, linear, mlp,
+                                 rmsnorm, unembed)
+from repro.models.moe import init_moe, moe_ffn
+
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply.
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, dtype,
+                     use_moe: Optional[bool] = None) -> Params:
+    use_moe = (cfg.moe is not None) if use_moe is None else use_moe
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {
+        "ln_attn": init_rmsnorm(cfg.d_model, dtype),
+        "attn": A.init_attention(k1, cfg, dtype),
+        "ln_mlp": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if use_moe:
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _apply_attn_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                      q_offset: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux_loss). A block is MoE iff its params carry the
+    'moe' subtree (interleaved stacks mix dense and MoE blocks)."""
+    p = gather_layer_params(p)      # streamed-FSDP weight gather
+    aux = jnp.zeros((), jnp.float32)
+
+    def ffn(h):
+        nonlocal aux
+        if "moe" in p:
+            fo, al = moe_ffn(p["moe"], h, cfg)
+            aux = aux + al["load_balance"] * 0.01 + al["router_z"] * 1e-4
+            return fo
+        return mlp(p["mlp"], h)
+
+    if cfg.parallel_block:
+        # Command-R: attention and FFN read the same normed input.
+        h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        ao, _ = A.attention_forward(p["attn"], h, cfg, q_offset)
+        return x + ao + ffn(h), aux
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    ao, _ = A.attention_forward(p["attn"], h, cfg, q_offset)
+    x = x + ao
+    h = rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    return x + ffn(h), aux
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "mamba": S.init_mamba(key, cfg, dtype),
+    }
+
+
+def _apply_mamba_block(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    p = gather_layer_params(p)      # streamed-FSDP weight gather
+    return x + S.mamba_forward(p["mamba"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                               cfg)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init.
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: Dict[str, PyTree] = {
+        "embed": init_embedding(keys[-1], cfg.vocab, cfg.d_model, dtype),
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(keys[-2], cfg.vocab, cfg.d_model,
+                                           dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = init_linear(keys[-3], cfg.frontend_dim,
+                                              cfg.d_model, dtype=dtype)
+
+    if cfg.block_type is BlockType.MAMBA:
+        layers = [_init_mamba_block(keys[i], cfg, dtype)
+                  for i in range(cfg.n_layers)]
+        if cfg.attn_every:
+            ng = cfg.n_layers // cfg.attn_every
+            grouped = [_stack(layers[i * cfg.attn_every:(i + 1)
+                                     * cfg.attn_every]) for i in range(ng)]
+            params["layers"] = _stack(grouped)
+            params["shared_attn"] = _init_attn_block(keys[-4], cfg, dtype,
+                                                     use_moe=False)
+        else:
+            params["layers"] = _stack(layers)
+    elif cfg.moe is not None and cfg.moe_every > 1:
+        # Interleaved dense/MoE (Llama-4): groups of (moe_every-1) dense
+        # blocks followed by one MoE block.
+        ng = cfg.n_layers // cfg.moe_every
+        dense, moe_blocks = [], []
+        for i in range(ng):
+            base = i * cfg.moe_every
+            dense.append(_stack([
+                _init_attn_block(keys[base + j], cfg, dtype, use_moe=False)
+                for j in range(cfg.moe_every - 1)]))
+            moe_blocks.append(_init_attn_block(
+                keys[base + cfg.moe_every - 1], cfg, dtype, use_moe=True))
+        params["layers"] = {"dense": _stack(dense),
+                            "moe": _stack(moe_blocks)}
+    else:
+        params["layers"] = _stack([_init_attn_block(keys[i], cfg, dtype)
+                                   for i in range(cfg.n_layers)])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill).
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                  frontend_embeds: Optional[jax.Array]) -> jax.Array:
+    x = embed(params["embed"], tokens)
+    if cfg.frontend != "none":
+        assert frontend_embeds is not None, \
+            f"{cfg.name} requires frontend embeddings"
+        fe = linear(params["frontend_proj"],
+                    frontend_embeds.astype(x.dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            frontend_embeds: Optional[jax.Array] = None,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S_text) → (logits (B, S, vocab) fp32, moe_aux scalar)."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+
+    if cfg.block_type is BlockType.MAMBA and cfg.attn_every:
+        shared = params["shared_attn"]
+
+        def group_body(carry, lp):
+            x, aux = carry
+            x = constrain_residual(x)
+
+            def mamba_body(xc, mp):
+                return _apply_mamba_block(mp, constrain_residual(xc),
+                                          cfg), None
+
+            x, _ = _scan(mamba_body, x, lp)
+            x, a = _apply_attn_block(shared, x, cfg)
+            return (x, aux + a), None
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        (x, aux), _ = _scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    elif cfg.block_type is BlockType.MAMBA:
+        def m_body(carry, lp):
+            return _apply_mamba_block(lp, constrain_residual(carry),
+                                      cfg), None
+
+        body = jax.checkpoint(m_body) if remat else m_body
+        x, _ = _scan(body, x, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.moe is not None and cfg.moe_every > 1:
+        def pair_body(carry, lp):
+            x, aux = carry
+            x = constrain_residual(x)
+
+            def dense_body(c2, dp):
+                x2, a2 = c2
+                x2, a = _apply_attn_block(dp, x2, cfg)
+                return (x2, a2 + a), None
+
+            (x, aux), _ = _scan(dense_body, (x, aux), lp["dense"])
+            x, a = _apply_attn_block(lp["moe"], x, cfg)
+            return (x, aux + a), None
+
+        body = jax.checkpoint(pair_body) if remat else pair_body
+        (x, aux), _ = _scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        def a_body(carry, lp):
+            x, aux = carry
+            x, a = _apply_attn_block(lp, constrain_residual(x), cfg)
+            return (x, aux + a), None
+
+        body = jax.checkpoint(a_body) if remat else a_body
+        (x, aux), _ = _scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_from_hidden(params: PyTree, cfg: ModelConfig,
+                       x: jax.Array) -> jax.Array:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x)
+
+
+def loss_fn(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            ce_chunk: int = 512) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy over the text positions.
+
+    The (B, S, vocab) logits tensor is never materialized: CE is computed in
+    sequence chunks inside a lax.scan (fp32 per chunk only) — essential for
+    the 150k-250k vocab archs at 4k×256 batch.
+    """
+    hidden, aux = forward(params, batch["tokens"], cfg,
+                          batch.get("frontend_embeds"))
+    n_front = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    h = hidden[:, n_front:, :]
+    b, s, d = h.shape
+    h_in = h[:, :-1]
+    labels = batch["tokens"][:, 1:]
+    n = s - 1
+    c = min(ce_chunk, n)
+    nc = -(-n // c)
+    pad = nc * c - n
+    if pad:
+        h_in = jnp.pad(h_in, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h_in.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+    def body(acc, xs):
+        h_i, l_i = xs
+        logits = unembed(head, h_i)                     # (B, c, V) fp32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        # Gold logit via one-hot contraction: keeps the vocab dim sharded
+        # (take_along_axis over a sharded dim would force GSPMD to gather
+        # the full logits tensor — TB-scale collectives at 250k vocab).
+        onehot = jax.nn.one_hot(jnp.maximum(l_i, 0), logits.shape[-1],
+                                dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        valid = (l_i >= 0).astype(jnp.float32)
+        ce_sum, cnt = acc
+        return (ce_sum + jnp.sum((logz - gold) * valid),
+                cnt + valid.sum()), None
+
+    # Recompute logits in the backward pass instead of saving (B, c, V)
+    # fp32 chunks per step.
+    (ce_sum, cnt), _ = _scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    ce = ce_sum / jnp.maximum(cnt, 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Decode cache. Attention archs: (L, B, S_cache, KvH, D) KV (S_cache =
+    sliding window if set); MLA: latent cache; SSM: conv+ssm states."""
+    dtype = _dtype(cfg)
+    s_cache = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+        else max_len
+
+    def attn_cache():
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((batch, s_cache, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, s_cache, m.qk_rope_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+        }
+
+    if cfg.block_type is BlockType.MAMBA and cfg.attn_every:
+        ng = cfg.n_layers // cfg.attn_every
+        return {
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (ng, cfg.attn_every) + x.shape),
+                S.init_mamba_cache(cfg, batch)),
+            "attn": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (ng,) + x.shape), attn_cache()),
+        }
+    if cfg.block_type is BlockType.MAMBA:
+        return {"mamba": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+            S.init_mamba_cache(cfg, batch))}
+    if cfg.moe is not None and cfg.moe_every > 1:
+        ng = cfg.n_layers // cfg.moe_every
+        return {"attn": {
+            "dense": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (ng, cfg.moe_every - 1) + x.shape), attn_cache()),
+            "moe": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (ng,) + x.shape),
+                attn_cache()),
+        }}
+    return {"attn": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+        attn_cache())}
+
+
+def decode_step(params: PyTree, tokens: jax.Array, cache: PyTree,
+                pos: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, PyTree]:
+    """tokens: (B, 1) — one new token per sequence; pos: scalar int32 count
+    of tokens already in the cache. Returns (logits (B, vocab), new cache).
+    """
+    x = embed(params["embed"], tokens)
+
+    if cfg.block_type is BlockType.MAMBA and cfg.attn_every:
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            lp, mcache, acache = xs
+
+            def inner(x, xs2):
+                mp, mc = xs2
+                h = rmsnorm(mp["ln"], x, cfg.norm_eps)
+                y, mc2 = S.mamba_decode(mp["mamba"], h, mc, cfg)
+                return x + y, mc2
+
+            x, mcache2 = _scan(inner, x, (lp, mcache))
+            h = rmsnorm(shared["ln_attn"], x, cfg.norm_eps)
+            ao, acache2 = A.attention_decode(shared["attn"], h, acache, pos,
+                                             cfg)
+            x = x + ao
+            h = rmsnorm(shared["ln_mlp"], x, cfg.norm_eps)
+            x = x + mlp(shared["mlp"], h)
+            return x, (mcache2, acache2)
+
+        x, (mc, ac) = _scan(group_body, x,
+                                   (params["layers"], cache["mamba"],
+                                    cache["attn"]))
+        new_cache = {"mamba": mc, "attn": ac}
+    elif cfg.block_type is BlockType.MAMBA:
+        def m_body(x, xs):
+            lp, mc = xs
+            h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+            y, mc2 = S.mamba_decode(lp["mamba"], h, mc, cfg)
+            return x + y, mc2
+
+        x, mc = _scan(m_body, x, (params["layers"], cache["mamba"]))
+        new_cache = {"mamba": mc}
+    else:
+        def a_body(x, xs):
+            lp, ac = xs
+
+            def ffn(h):
+                return mlp(lp["mlp"], h) if "mlp" in lp \
+                    else moe_ffn(lp["moe"], h, cfg)[0]
+
+            if cfg.parallel_block:
+                h = rmsnorm(lp["ln_attn"], x, cfg.norm_eps)
+                ao, ac2 = A.attention_decode(lp["attn"], h, ac, pos, cfg)
+                return x + ao + ffn(h), ac2
+            h = rmsnorm(lp["ln_attn"], x, cfg.norm_eps)
+            ao, ac2 = A.attention_decode(lp["attn"], h, ac, pos, cfg)
+            x = x + ao
+            h = rmsnorm(lp["ln_mlp"], x, cfg.norm_eps)
+            return x + ffn(h), ac2
+
+        if cfg.moe is not None and cfg.moe_every > 1:
+            def pair_body(x, xs):
+                lp, ac = xs
+
+                def inner(x2, xs2):
+                    return a_body(x2, xs2)
+
+                x, dc = _scan(inner, x, (lp["dense"], ac["dense"]))
+                x, mc = a_body(x, (lp["moe"], ac["moe"]))
+                return x, {"dense": dc, "moe": mc}
+
+            x, ac = _scan(pair_body, x,
+                                 (params["layers"], cache["attn"]))
+            new_cache = {"attn": ac}
+        else:
+            x, ac = _scan(a_body, x,
+                                 (params["layers"], cache["attn"]))
+            new_cache = {"attn": ac}
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x)[:, 0]
+    return logits, new_cache
+
+
+def prefill(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Prefill forward; returns last-position logits (B, vocab) — the full
+    (B, S, vocab) tensor is never formed."""
+    hidden, _ = forward(params, tokens, cfg, frontend_embeds)
+    return logits_from_hidden(params, cfg, hidden[:, -1:, :])[:, 0]

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN.
+
+Two dispatch algorithms (per-layer algorithm choice — the DYNAMAP idea
+applied to MoE):
+
+* ``moe_ffn_dense`` — the classic GShard (T, E, C) one-hot einsum dispatch.
+  Simple, but the dispatch/combine tensors are O(T²·k/E)-ish and at 1M
+  tokens they dominate memory AND flops (the dry-run showed 365 GB/device
+  temps on deepseek-v2 prefill). Kept for comparison and for tiny token
+  counts.
+
+* ``moe_ffn`` (default) — sort-based capacity dispatch, batched per
+  sequence row so every gather stays inside one data shard:
+    1. top-k routing per token;
+    2. per-row argsort by expert id → each expert's tokens are contiguous;
+    3. (E, C) gather indices from per-expert offsets (capacity-bounded,
+       overflow dropped — GShard semantics);
+    4. gather → (B, E, C, d), stacked-expert SwiGLU einsum (EP shards E on
+       the model axis; GSPMD inserts the all-to-alls), scatter-add back.
+  No (T, E, C) tensor ever exists.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, init_linear, init_mlp, linear, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    mo = cfg.moe
+    d = cfg.d_model
+    k_router, k_w1, k_w3, k_w2, k_shared = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p: Params = {
+        "router": init_linear(k_router, d, mo.n_experts, dtype=jnp.float32),
+        # Expert-stacked SwiGLU weights: (E, d, f) / (E, f, d).
+        "w_gate": (jax.random.normal(k_w1, (mo.n_experts, d, mo.d_ff_expert),
+                                     jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(k_w3, (mo.n_experts, d, mo.d_ff_expert),
+                                   jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(k_w2, (mo.n_experts, mo.d_ff_expert, d),
+                                     jnp.float32)
+                   * mo.d_ff_expert ** -0.5).astype(dtype),
+    }
+    if mo.n_shared:
+        p["shared"] = init_mlp(k_shared, d,
+                               (mo.d_ff_shared or mo.d_ff_expert)
+                               * mo.n_shared, dtype=dtype)
+    return p
+
+
+def _router(p: Params, xt: jax.Array, mo) -> Tuple[jax.Array, jax.Array,
+                                                   jax.Array]:
+    """Per-token routing: (gates (…,k), experts (…,k), probs (…,E))."""
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topg, topi = jax.lax.top_k(probs, mo.top_k)
+    topg = topg / jnp.maximum(topg.sum(-1, keepdims=True), 1e-9)
+    return topg, topi, probs, logits
+
+
+def _aux(probs: jax.Array, topi: jax.Array, logits: jax.Array, mo
+         ) -> Dict[str, jax.Array]:
+    me = probs.reshape(-1, mo.n_experts).mean(0)
+    sel = jax.nn.one_hot(topi.reshape(-1), mo.n_experts,
+                         dtype=jnp.float32).mean(0) * mo.top_k
+    lb = mo.n_experts * jnp.sum(me * sel / mo.top_k)
+    zl = jnp.mean(jax.scipy.special.logsumexp(
+        logits.reshape(-1, mo.n_experts), axis=-1) ** 2)
+    return {"load_balance": lb, "router_z": zl}
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch (default).
+# ---------------------------------------------------------------------------
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d). Routing groups = sequence rows, so all gathers are
+    intra-row (and therefore intra-data-shard under batch sharding)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    k = mo.top_k
+    e = mo.n_experts
+    cap = int(s * k / e * mo.capacity_factor)
+    cap = max(4, -(-cap // 4) * 4)
+
+    topg, topi, probs, logits = _router(p, x, mo)     # (B,S,k) ×2, (B,S,E)
+
+    # Flatten routed copies within each row: (B, S·k).
+    flat_e = topi.reshape(b, s * k)
+    flat_g = topg.reshape(b, s * k)
+    tok_of = jnp.repeat(jnp.arange(s), k)[None, :].astype(jnp.int32)
+    tok_of = jnp.broadcast_to(tok_of, (b, s * k))
+
+    order = jnp.argsort(flat_e, axis=-1)              # contiguous experts
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    st = jnp.take_along_axis(tok_of, order, axis=-1)  # token id per slot
+
+    # Per-row expert counts/offsets via scatter-add (no (T,E) one-hot).
+    counts = jnp.zeros((b, e), jnp.int32).at[
+        jnp.arange(b)[:, None], flat_e].add(1)
+    offsets = jnp.cumsum(counts, axis=-1) - counts    # start of each expert
+
+    slot = offsets[:, :, None] + jnp.arange(cap)[None, None, :]  # (B,E,C)
+    valid = jnp.arange(cap)[None, None, :] < counts[:, :, None]
+    slot_c = jnp.clip(slot, 0, s * k - 1)
+
+    tok_idx = jnp.take_along_axis(st, slot_c.reshape(b, -1), axis=-1) \
+        .reshape(b, e, cap)                            # (B,E,C) token ids
+    gate = jnp.take_along_axis(sg, slot_c.reshape(b, -1), axis=-1) \
+        .reshape(b, e, cap) * valid
+
+    # Gather: (B, E, C, d) — intra-row, stays in the data shard.
+    xe = jnp.take_along_axis(
+        x[:, None, :, :], tok_idx[..., None].astype(jnp.int32),
+        axis=2) * valid[..., None].astype(x.dtype)
+
+    h = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u, p["w_down"])
+    ye = ye * gate[..., None].astype(ye.dtype)
+
+    # Scatter-add back per row.
+    y = jnp.zeros((b, s, d), ye.dtype).at[
+        jnp.arange(b)[:, None], tok_idx.reshape(b, -1)].add(
+        ye.reshape(b, -1, d))
+    y = y.astype(x.dtype)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x.reshape(-1, d)).reshape(b, s, d)
+    return y, _aux(probs, topi, logits, mo)
+
+
+# ---------------------------------------------------------------------------
+# Dense GShard dispatch (comparison baseline; see module docstring).
+# ---------------------------------------------------------------------------
+
+def moe_ffn_dense(p: Params, x: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    topg, topi, probs, logits = _router(p, xt, mo)
+    cap = int(t * mo.top_k / mo.n_experts * mo.capacity_factor)
+    cap = max(4, -(-cap // 4) * 4)
+
+    combine = jnp.zeros((t, mo.n_experts, cap), jnp.float32)
+    prev = jnp.zeros((mo.n_experts,), jnp.int32)
+    for kk in range(mo.top_k):
+        onehot = jax.nn.one_hot(topi[:, kk], mo.n_experts,
+                                dtype=jnp.float32)
+        pos = jnp.cumsum(onehot, axis=0) - 1.0 + prev[None, :]
+        pos_tok = (pos * onehot).sum(-1)
+        keep = pos_tok < cap
+        pos_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap,
+                                dtype=jnp.float32) * keep[:, None]
+        combine = combine + topg[:, kk, None, None] * onehot[:, :, None] \
+            * pos_oh[:, None, :]
+        prev = prev + onehot.sum(0).astype(jnp.int32)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xe = jnp.einsum("tec,td->ecd", dispatch, xt)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"])
+    y = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), ye)
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], xt).reshape(b, s, d)
+    return y, _aux(probs, topi, logits, mo)

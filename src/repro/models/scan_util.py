@@ -1,0 +1,24 @@
+"""Scan wrapper with an environment-controlled unroll switch.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+which would corrupt the roofline terms. The roofline probes therefore
+compile small-L model variants with REPRO_FULL_UNROLL=1 — every lax.scan
+fully unrolls, cost_analysis counts every iteration, and the per-layer
+terms are recovered exactly by differencing two probe sizes
+(launch.roofline). Normal runs keep rolled loops (small HLO, fast
+compiles).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def full_unroll() -> bool:
+    return os.environ.get("REPRO_FULL_UNROLL", "0") not in ("0", "", "false")
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if full_unroll() else 1)

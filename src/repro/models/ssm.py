@@ -1,0 +1,182 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD: intra-chunk "attention" (the duality's quadratic branch) plus
+inter-chunk state recurrence (linear branch) carried by a lax.scan. Decode
+is the O(1) recurrent update on (conv_state, ssm_state) — this is what makes
+the 500k-token decode cell trivial for SSM archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_util import scan as _scan
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, init_linear, linear, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim      # x, B, C share the causal conv
+    return s, d_in, nh, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # z, x, B, C, dt fused input projection.
+        "in_proj": init_linear(k1, d, 2 * d_in + 2 * s.state_dim + nh,
+                               dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),         # A = -exp(a_log)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), dtype)},
+        "out_proj": init_linear(k3, d_in, d, dtype=dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., Q) → (..., Q, Q) with out[q, k] = Σ_{j=k+1..q} x_j (−inf
+    above the diagonal)."""
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    q = x.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xbar: jax.Array, da: jax.Array, b_in: jax.Array,
+                c_in: jax.Array, chunk: int) -> jax.Array:
+    """xbar: (B, L, H, P) = dt·x;  da: (B, L, H) = dt·A (negative);
+    b_in, c_in: (B, L, N). Returns y: (B, L, H, P)."""
+    bsz, l, h, p = xbar.shape
+    n = b_in.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    nc = xbar.shape[1] // q
+    xc = xbar.reshape(bsz, nc, q, h, p)
+    dac = da.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)   # (B,H,nc,Q)
+    bc = b_in.reshape(bsz, nc, q, n)
+    cc = c_in.reshape(bsz, nc, q, n)
+
+    da_cs = jnp.cumsum(dac, axis=-1)                        # (B,H,nc,Q)
+    decay = jnp.exp(_segsum(dac))                           # (B,H,nc,Q,Q)
+
+    # Intra-chunk (quadratic branch).
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)          # (B,nc,Q,Q)
+    m = jnp.einsum("bcqk,bhcqk->bhcqk", scores, decay)
+    y_diag = jnp.einsum("bhcqk,bckhp->bcqhp", m, xc)
+
+    # Chunk-final states.
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)         # (B,H,nc,Q)
+    states = jnp.einsum("bckn,bhck,bckhp->bchnp", bc, decay_states, xc)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(da_cs[..., -1])                   # (B,H,nc)
+
+    def body(s_prev, xs):
+        s_c, cd = xs                                        # (B,H,N,P),(B,H)
+        s_new = s_prev * cd[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, prev_states = _scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,N,P)
+
+    # Contribution of carried state into each position.
+    state_decay = jnp.exp(da_cs)                            # (B,H,nc,Q)
+    y_off = jnp.einsum("bcqn,bchnp,bhcq->bcqhp", cc,
+                       prev_states.astype(xc.dtype), state_decay)
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)
+    return y[:, :l]
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) → (B, S, d)."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    bsz, l, _ = x.shape
+    zxbcdt = linear(p["in_proj"], x)
+    z, xin, b_in, c_in, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + s.state_dim,
+                 2 * d_in + 2 * s.state_dim], axis=-1)
+    # Causal depthwise conv over (x, B, C).
+    xbc = jnp.concatenate([xin, b_in, c_in], axis=-1)       # (B, L, conv_ch)
+    w = p["conv_w"].astype(jnp.float32)
+    xbc_p = jnp.pad(xbc.astype(jnp.float32),
+                    ((0, 0), (s.conv_width - 1, 0), (0, 0)))
+    conv = sum(xbc_p[:, i:i + l] * w[i] for i in range(s.conv_width))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    xin, b_in, c_in = jnp.split(conv, [d_in, d_in + s.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+    xh = xin.reshape(bsz, l, nh, s.head_dim)
+    y = ssd_chunked((xh * dt[..., None]).astype(jnp.float32),
+                    dt * a, b_in, c_in, s.chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path.
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_dim), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d); O(1) state update."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    bsz = x.shape[0]
+    zxbcdt = linear(p["in_proj"], x[:, 0])
+    z, xin, b_in, c_in, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + s.state_dim,
+                 2 * d_in + 2 * s.state_dim], axis=-1)
+    xbc = jnp.concatenate([xin, b_in, c_in], axis=-1)       # (B, conv_ch)
+    hist = jnp.concatenate([cache["conv"],
+                            xbc[:, None].astype(cache["conv"].dtype)],
+                           axis=1)                           # (B, W, ch)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w)
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    xin, b_in, c_in = jnp.split(conv, [d_in, d_in + s.state_dim], axis=-1)
+
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt1 * a)                                   # (B,H)
+    xh = xin.reshape(bsz, nh, s.head_dim)
+    ssm = cache["ssm"] * da[..., None, None] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xh, b_in, dt1)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, c_in) \
+        + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z[:, None]))
+    out = linear(p["out_proj"], y)
+    return out, {"conv": hist[:, 1:], "ssm": ssm}

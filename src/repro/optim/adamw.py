@@ -1,0 +1,114 @@
+"""AdamW with global-norm clipping, cosine schedule, optional int8
+gradient compression with error feedback (distributed-optimization trick
+for bandwidth-bound multi-pod gradient reduction)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+
+def init_opt_state(params: PyTree, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return OptState(m=zeros,
+                    v=jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params: PyTree, grads: PyTree, state: OptState,
+                  cfg: AdamWConfig) -> Tuple[PyTree, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback (for DCI-bound pods).
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grad(g: jax.Array, err: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback compression: quantize (g + carried error), carry the
+    quantization residual to the next step."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = compress_int8(g32)
+    deq = decompress_int8(q, scale)
+    return deq.astype(g.dtype), g32 - deq

@@ -1,0 +1,128 @@
+"""Graph IR, series-parallel recognition, and the Eq. 9-13 cost model."""
+import math
+
+import pytest
+
+from repro.cnn.models import MODELS
+from repro.core.algorithms import (IM2COL, KN2ROW, WINO_2_3, WINO_4_3,
+                                   menu_for)
+from repro.core.cost_model import (Dataflow, FPGA_LIKE, V5E, best_dataflow,
+                                   eff_bandwidth, fits_on_chip, gemm_steps,
+                                   gemm_utilization, node_cost,
+                                   transition_cost)
+from repro.core.graph import ConvMeta, Graph, LayerKind, is_series_parallel
+
+
+# ----------------------------------------------------------------- graphs
+def test_all_model_graphs_are_series_parallel():
+    """Lemmas 4.3 / 4.4 for every builder (incl. the branchy Inception-C)."""
+    for name, build in MODELS.items():
+        g = build(res=64 if name != "inception_v4" else 75, scale=0.2)
+        assert is_series_parallel(g), name
+
+
+def test_k4_is_not_series_parallel():
+    g = Graph()
+    ids = [g.add_node(LayerKind.CONCAT, out_shape=(1, 1, 1))
+           for _ in range(4)]
+    # K4 with a source/sink orientation
+    g.add_edge(ids[0], ids[1])
+    g.add_edge(ids[0], ids[2])
+    g.add_edge(ids[1], ids[2])
+    g.add_edge(ids[1], ids[3])
+    g.add_edge(ids[2], ids[3])
+    g.add_edge(ids[0], ids[3])
+    assert not is_series_parallel(g)
+
+
+def test_conv_meta_output_dims():
+    m = ConvMeta(c_in=3, c_out=8, h1=15, h2=15, k1=3, k2=3, stride=2,
+                 pad="same")
+    assert (m.o1, m.o2) == (8, 8)
+    m2 = ConvMeta(c_in=3, c_out=8, h1=15, h2=15, k1=3, k2=3, stride=1,
+                  pad="valid")
+    assert (m2.o1, m2.o2) == (13, 13)
+
+
+# ---------------------------------------------------------------- Eq. 9
+def test_gemm_steps_matches_eq9():
+    # paper §3.2 example: 31x31 array, (a,b,c) = (62,124,64)
+    a, b, c = 62, 124, 64
+    ns = gemm_steps(a, b, c, 31, 31, Dataflow.NS, i_sa=0)
+    assert ns == math.ceil(62 / 31) * math.ceil(64 / 31) * 124
+    ws = gemm_steps(a, b, c, 31, 31, Dataflow.WS, i_sa=0)
+    assert ws == math.ceil(124 / 31) * math.ceil(64 / 31) * 62
+    # the paper's utilization claim (§3.2): (a,c)-parallel ≈ 68%;
+    # (a,b)-parallel (= IS binding: b→P_SA1, a→P_SA2) hits 100%.
+    util_ns = gemm_utilization(a, b, c, 31, 31, Dataflow.NS)
+    assert util_ns == pytest.approx(0.688, abs=0.02)
+    util_is = gemm_utilization(a, b, c, 31, 31, Dataflow.IS)
+    assert util_is == pytest.approx(1.0, abs=1e-6)
+    # best_dataflow therefore picks the dataflow the paper advocates
+    df, _ = best_dataflow(a, b, c, 31, 31)
+    assert df == Dataflow.IS
+
+
+def test_eff_bandwidth_lane_penalty():
+    assert eff_bandwidth(V5E, 128) == V5E.hbm_bw
+    assert eff_bandwidth(V5E, 256) == V5E.hbm_bw
+    assert eff_bandwidth(V5E, 64) == pytest.approx(V5E.hbm_bw * 0.5)
+
+
+# ------------------------------------------------------------- node cost
+CONV = ConvMeta(c_in=96, c_out=128, h1=28, h2=28, k1=3, k2=3)
+
+
+def test_winograd_reduces_multiplies():
+    assert WINO_2_3.multiplies(CONV) < IM2COL.multiplies(CONV)
+    # F(2,3) reduces 3x3 multiplies by 2.25x = (4*9)/16
+    ratio = IM2COL.multiplies(CONV) / WINO_2_3.multiplies(CONV)
+    assert ratio == pytest.approx(2.25, rel=0.01)
+
+
+def test_im2col_kn2row_same_multiplies():
+    assert IM2COL.multiplies(CONV) == KN2ROW.multiplies(CONV)
+
+
+def test_winograd_applicability():
+    strided = ConvMeta(c_in=3, c_out=8, h1=28, h2=28, k1=3, k2=3, stride=2)
+    rect = ConvMeta(c_in=3, c_out=8, h1=28, h2=28, k1=1, k2=7)
+    assert not WINO_2_3.applicable(strided)
+    assert not WINO_2_3.applicable(rect)
+    assert KN2ROW.applicable(rect)
+    assert [a.family for a in menu_for(rect)] == \
+        [IM2COL.family, KN2ROW.family]
+
+
+def test_node_cost_decomposition_positive():
+    for algo in (IM2COL, KN2ROW, WINO_2_3, WINO_4_3):
+        nc = node_cost(CONV, algo, 128, 128, spec=V5E)
+        assert nc.total > 0
+        assert 0 < nc.utilization <= 1.0
+    # kn2row pays pad-and-accumulate, winograd pays transforms
+    assert node_cost(CONV, KN2ROW, 128, 128, spec=V5E).transform_s > 0
+    assert node_cost(CONV, WINO_2_3, 128, 128, spec=V5E).transform_s > 0
+    assert node_cost(CONV, IM2COL, 128, 128, spec=V5E).transform_s == 0
+
+
+# -------------------------------------------------------------- Table 2
+def test_transition_costs_follow_table2_ordering():
+    nxt = ConvMeta(c_in=128, c_out=128, h1=28, h2=28, k1=3, k2=3)
+    # Toeplitz store duplicates K1K2 > 3-D tensor store.
+    to_im2col = transition_cost(KN2ROW, IM2COL, nxt, 128, V5E)
+    to_kn2row = transition_cost(IM2COL, KN2ROW, nxt, 128, V5E)
+    assert to_im2col > to_kn2row
+    # Winograd input layout costs the (m+r-1)^2/m^2 blowup.
+    to_wino = transition_cost(IM2COL, WINO_2_3, nxt, 128, V5E)
+    assert to_wino > to_kn2row
+    # implicit-GEMM mode (beyond-paper) removes the Toeplitz duplication.
+    implicit = transition_cost(KN2ROW, IM2COL, nxt, 128, V5E,
+                               implicit_im2col=True)
+    assert implicit < to_im2col
+    # step ⑤: on-chip chaining removes the round trip entirely.
+    assert transition_cost(KN2ROW, IM2COL, nxt, 128, V5E, on_chip=True) == 0
+
+
+def test_fits_on_chip():
+    assert fits_on_chip(1000, 1000, V5E)
+    assert not fits_on_chip(10 ** 9, 10 ** 9, FPGA_LIKE)

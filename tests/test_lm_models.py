@@ -1,0 +1,155 @@
+"""LM stack: per-arch smoke tests + decode↔prefill consistency + SSD oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.attention import chunked_attention
+from repro.models.model import (decode_step, forward, init_cache, init_model,
+                                logits_from_hidden, loss_fn)
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=32):
+    n_front = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    batch = {"tokens": jax.random.randint(KEY, (b, s - n_front), 0,
+                                          cfg.vocab)}
+    if n_front:
+        batch["frontend_embeds"] = jax.random.normal(
+            KEY, (b, n_front, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_forward_and_train_step(name):
+    """Assignment requirement: reduced config, one forward/train step on
+    CPU, output shapes + no NaNs."""
+    cfg = get_config(name, reduced=True)
+    params = init_model(cfg, KEY)
+    batch = make_batch(cfg)
+    hidden, aux = forward(params, batch["tokens"], cfg,
+                          batch.get("frontend_embeds"))
+    assert hidden.shape == (2, 32, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+    loss, metrics = loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: loss_fn(p, batch, cfg)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_decode_step_runs(name):
+    cfg = get_config(name, reduced=True)
+    params = init_model(cfg, KEY)
+    cache = init_cache(cfg, batch=2, max_len=64)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache2 = decode_step(params, tok, cache, jnp.int32(0), cfg)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", ["qwen2.5-14b", "mamba2-370m",
+                                  "h2o-danube-1.8b", "deepseek-v2-236b",
+                                  "zamba2-2.7b"])
+def test_decode_matches_forward(name):
+    """Token-by-token decode reproduces the teacher-forced forward logits
+    (the core serving-correctness invariant, incl. MLA absorbed decode and
+    mamba recurrent decode)."""
+    import dataclasses
+    # float32 so the equivalence check isn't swamped by bf16 noise; for MoE
+    # archs raise capacity so no tokens drop (capacity-drop populations
+    # necessarily differ between teacher-forced prefill and decode).
+    cfg = dataclasses.replace(get_config(name, reduced=True),
+                              dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    if cfg.frontend != "none":
+        pytest.skip("frontend archs prepend embeddings")
+    params = init_model(cfg, KEY)
+    b, s = 2, 12
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    hidden, _ = forward(params, tokens, cfg)
+    ref_logits = logits_from_hidden(params, cfg, hidden)  # (b, s, V)
+
+    cache = init_cache(cfg, batch=b, max_len=32)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, tokens[:, t:t + 1], cache,
+                                jnp.int32(t), cfg)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_masks_distant_tokens():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    assert cfg.sliding_window == 64
+    q = jax.random.normal(KEY, (1, 8, 2, 16))
+    k = jax.random.normal(KEY, (1, 8, 2, 16))
+    v = jax.random.normal(KEY, (1, 8, 2, 16))
+    full = chunked_attention(q, k, v, window=0, chunk=4)
+    win = chunked_attention(q, k, v, window=2, chunk=4)
+    # with window 2, position 7 ignores keys 0..5 → must differ from full
+    assert not np.allclose(np.asarray(full[0, 7]), np.asarray(win[0, 7]),
+                           atol=1e-4)
+    # position 0/1 see the same context in both
+    np.testing.assert_allclose(np.asarray(full[0, 0]),
+                               np.asarray(win[0, 0]), rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_attention_matches_full_softmax():
+    b, s, h, d = 2, 33, 4, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, 2, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, 2, d))
+    out = chunked_attention(q, k, v, chunk=8)
+    # reference: dense causal softmax with GQA repeat
+    kr = jnp.repeat(k, 2, axis=2)
+    vr = jnp.repeat(v, 2, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(d)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """SSD (Eq. duality) vs the literal h_t = exp(dtA)h + dt·B x recurrence."""
+    rng = np.random.default_rng(3)
+    b, l, h, p, n = 2, 24, 3, 4, 8
+    xbar = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32) * 0.5
+    dta = -jnp.asarray(rng.random((b, l, h)), jnp.float32) * 0.5
+    b_in = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32) * 0.5
+    c_in = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32) * 0.5
+    got = ssd_chunked(xbar, dta, b_in, c_in, chunk=8)
+
+    state = np.zeros((b, h, p, n), np.float32)
+    want = np.zeros((b, l, h, p), np.float32)
+    for t in range(l):
+        da = np.exp(np.asarray(dta[:, t]))                  # (b, h)
+        state = state * da[:, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", np.asarray(xbar[:, t]), np.asarray(b_in[:, t]))
+        want[:, t] = np.einsum("bhpn,bn->bhp", state, np.asarray(c_in[:, t]))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_aux_losses_and_capacity():
+    from repro.models.moe import init_moe, moe_ffn
+    cfg = get_config("deepseek-v2-236b", reduced=True)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.bfloat16)
+    y, aux = moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux["load_balance"]) >= 1.0 - 1e-3   # ≥ 1 by Cauchy-Schwarz
+    assert np.isfinite(float(aux["router_z"]))

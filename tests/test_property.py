@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithms import IM2COL, KN2ROW, WINO_2_3, menu_for
+from repro.core.cost_model import (ALL_DATAFLOWS, Dataflow, V5E,
+                                   best_dataflow, gemm_steps,
+                                   gemm_utilization, node_cost)
+from repro.core.graph import ConvMeta
+from repro.core.pbqp import (PBQP, solve_brute_force, solve_greedy_node,
+                             solve_series_parallel)
+from repro.kernels.common import ceil_to, pad_to
+
+dims = st.integers(min_value=1, max_value=600)
+blocks = st.sampled_from([8, 32, 128, 256])
+
+
+@given(a=dims, b=dims, c=dims, p1=blocks, p2=blocks)
+@settings(max_examples=60, deadline=None)
+def test_gemm_steps_lower_bounded_by_work(a, b, c, p1, p2):
+    """Eq. 9 invariant: steps·P_SA1·P_SA2 ≥ a·b·c (can't beat the MACs),
+    i.e. utilization ≤ 1; and the ceil waste bound holds."""
+    for df in ALL_DATAFLOWS:
+        steps = gemm_steps(a, b, c, p1, p2, df, i_sa=0)
+        assert steps * p1 * p2 >= a * b * c
+        assert 0 < gemm_utilization(a, b, c, p1, p2, df) <= 1.0
+
+
+@given(a=dims, b=dims, c=dims, p1=blocks, p2=blocks)
+@settings(max_examples=40, deadline=None)
+def test_best_dataflow_is_argmin(a, b, c, p1, p2):
+    df, steps = best_dataflow(a, b, c, p1, p2)
+    for other in ALL_DATAFLOWS:
+        assert steps <= gemm_steps(a, b, c, p1, p2, other)
+
+
+@given(h=st.integers(4, 64), cin=st.integers(1, 64),
+       cout=st.integers(1, 64), k=st.sampled_from([1, 3, 5, 7]),
+       stride=st.sampled_from([1, 2]))
+@settings(max_examples=40, deadline=None)
+def test_algorithm_menu_preserves_macs(h, cin, cout, k, stride):
+    """im2col/kn2row always match spatial-conv multiplies; Winograd is a
+    strict reduction (when applicable)."""
+    conv = ConvMeta(c_in=cin, c_out=cout, h1=h, h2=h, k1=k, k2=k,
+                    stride=stride)
+    assert IM2COL.multiplies(conv) == KN2ROW.multiplies(conv) == conv.macs
+    for algo in menu_for(conv):
+        nc = node_cost(conv, algo, 128, 128, spec=V5E)
+        assert nc.total > 0 and math.isfinite(nc.total)
+    if WINO_2_3.applicable(conv) and k == 3:
+        assert WINO_2_3.multiplies(conv) < conv.macs
+
+
+@st.composite
+def sp_pbqp(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    edges = [(0, 1)]
+    next_id = 2
+    for _ in range(draw(st.integers(1, 7))):
+        i = int(rng.integers(len(edges)))
+        u, v = edges[i]
+        if rng.random() < 0.6:
+            edges.pop(i)
+            edges += [(u, next_id), (next_id, v)]
+            next_id += 1
+        else:
+            edges.append((u, v))
+    p = PBQP()
+    d = {i: int(rng.integers(1, 4)) for i in range(next_id)}
+    for i in range(next_id):
+        p.add_node(i, rng.random(d[i]) * 10)
+    for (u, v) in edges:
+        p.add_edge(u, v, rng.random((d[u], d[v])) * 10)
+    return p
+
+
+@given(p=sp_pbqp())
+@settings(max_examples=30, deadline=None)
+def test_pbqp_sp_optimality_property(p):
+    got = solve_series_parallel(p, allow_heuristic=False)
+    want = solve_brute_force(p)
+    assert abs(got.cost - want.cost) < 1e-9
+    assert got.cost <= solve_greedy_node(p).cost + 1e-9
+    # every node assigned a valid index
+    for nid, choice in got.assignment.items():
+        assert 0 <= choice < p.costs[nid].size
+
+
+@given(n=st.integers(1, 300), m=st.sampled_from([1, 8, 128]))
+@settings(max_examples=30, deadline=None)
+def test_ceil_to_properties(n, m):
+    c = ceil_to(n, m)
+    assert c >= n and c % m == 0 and c - n < m
+
+
+@given(rows=st.integers(1, 40), cols=st.integers(1, 40))
+@settings(max_examples=20, deadline=None)
+def test_pad_to_zero_extends(rows, cols):
+    import jax.numpy as jnp
+    x = jnp.ones((rows, cols))
+    p = pad_to(x, (8, 128))
+    assert p.shape == (ceil_to(rows, 8), ceil_to(cols, 128))
+    assert float(p.sum()) == rows * cols

@@ -1,0 +1,192 @@
+"""Substrate: optimizer, data pipeline, checkpoint manager, fault logic,
+serving engine."""
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, PrefetchIterator, make_batch
+from repro.distributed.fault import (ElasticPlanner, HealthTracker,
+                                     StragglerMonitor, run_with_retries)
+from repro.models.model import init_model
+from repro.optim.adamw import (AdamWConfig, apply_updates, compressed_grad,
+                               init_opt_state, schedule)
+from repro.serving.engine import Request, ServingEngine
+
+
+# ---------------------------------------------------------------- optim
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, clip_norm=100.0)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        params, state, m = apply_updates(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(schedule(jnp.int32(0), cfg)) == pytest.approx(0.0)
+    assert float(schedule(jnp.int32(10), cfg)) == pytest.approx(1.0)
+    assert float(schedule(jnp.int32(100), cfg)) == pytest.approx(0.1,
+                                                                 abs=1e-6)
+
+
+def test_grad_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    err = jnp.zeros_like(g)
+    total_true, total_sent = jnp.zeros_like(g), jnp.zeros_like(g)
+    for _ in range(20):
+        sent, err = compressed_grad(g, err)
+        total_true += g
+        total_sent += sent
+    # error feedback keeps the accumulated bias bounded by one quant step
+    denom = float(jnp.max(jnp.abs(total_true)))
+    assert float(jnp.max(jnp.abs(total_true - total_sent))) / denom < 0.05
+
+
+# ----------------------------------------------------------------- data
+def test_data_determinism_and_host_slicing():
+    cfg = DataConfig(seed=1, global_batch=8, seq_len=64)
+    model = get_config("qwen2.5-14b", reduced=True)
+    b1 = make_batch(cfg, model, step=3)
+    b2 = make_batch(cfg, model, step=3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = make_batch(cfg, model, step=4)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert int(b1["tokens"].max()) < model.vocab
+
+
+def test_prefetch_iterator_orders_steps():
+    cfg = DataConfig(seed=0, global_batch=4, seq_len=32)
+    model = get_config("mamba2-370m", reduced=True)
+    it = PrefetchIterator(cfg, model, start_step=5, depth=2)
+    s1, _ = next(it)
+    s2, _ = next(it)
+    it.close()
+    assert (s1, s2) == (5, 6)
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=2, async_write=False)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for step in (10, 20, 30):
+        mgr.save(step, tree, extra={"step": step})
+    assert mgr.all_steps() == [20, 30]           # keep_n=2 GC'd step 10
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, extra = mgr.restore(like)
+    assert extra["step"] == 30
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A half-written (uncommitted) checkpoint must be invisible."""
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    tree = {"a": jnp.zeros((2,))}
+    mgr.save(5, tree)
+    # fake a torn write: directory exists but no COMMITTED marker
+    (tmp_path / "step_000000007").mkdir()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    tree = {"a": jnp.arange(1000, dtype=jnp.float32)}
+    mgr.save(1, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+# ----------------------------------------------------------------- fault
+def test_health_tracker_failure_detection():
+    ht = HealthTracker(n_hosts=4, beat_interval_s=1.0, max_missed=3)
+    for t in range(1, 10):
+        for h in (0, 1, 2):
+            ht.beat(h, float(t))
+        dead = ht.sweep(float(t))
+        if t >= 3:
+            assert 3 in dead or 3 not in ht.alive_hosts()
+    assert ht.alive_hosts() == [0, 1, 2]
+
+
+def test_elastic_planner_preserves_model_axis():
+    pl = ElasticPlanner(devices_per_host=4, model_axis=16)
+    plan, info = pl.plan(n_alive_hosts=64, global_batch=256)   # 256 devices
+    assert plan.model == 16 and plan.data == 16
+    plan2, info2 = pl.plan(n_alive_hosts=60, global_batch=256)  # 240 devices
+    assert plan2.model == 16
+    assert plan2.data == 8                        # largest pow2 ≤ 15
+    assert info2["dropped_devices"] == 240 - plan2.devices
+    with pytest.raises(RuntimeError):
+        pl.plan(n_alive_hosts=2, global_batch=256)
+
+
+def test_straggler_monitor_flags_persistent_offender():
+    sm = StragglerMonitor(n_hosts=8, k=3.0, patience=2)
+    base = {h: 1.0 for h in range(8)}
+    evict = sm.observe({**base, 5: 10.0})
+    assert evict == []
+    evict = sm.observe({**base, 5: 12.0})
+    assert evict == [5]
+    # a recovered host resets
+    sm.observe(base)
+    assert sm.offense[5] == 0
+
+
+def test_run_with_retries_restores_and_completes():
+    log = []
+    saved = {"step": 0}
+    crashed = {"done": False}
+
+    def step_fn(step):
+        log.append(step)
+
+    def save_fn(step):
+        saved["step"] = step
+
+    def restore_fn():
+        return saved["step"]
+
+    def injector(step):
+        if step == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("simulated node failure")
+
+    stats = run_with_retries(step_fn, save_fn, restore_fn, n_steps=12,
+                             checkpoint_every=5, failure_injector=injector)
+    assert stats == {"completed": 12, "restarts": 1}
+    # steps 5..6 replayed after restore from checkpoint at 5
+    assert log.count(5) == 2 and log.count(6) == 2 and log.count(7) == 1
+
+
+# --------------------------------------------------------------- serving
+def test_serving_engine_continuous_batching():
+    cfg = get_config("qwen2.5-14b", reduced=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(4):      # 4 requests > 2 slots → queueing
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 5).astype(
+                               np.int32),
+                           max_new_tokens=3))
+    out = eng.run_until_done()
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(v) == 3 for v in out.values())
+    assert all(0 <= t < cfg.vocab for v in out.values() for t in v)

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests: the paper's full flow (DSE → PBQP → execute)
+and the LM training loop with checkpoint/restart."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.executor import forward as cnn_forward, init_params
+from repro.cnn.models import googlenet
+from repro.configs import get_config
+from repro.core import IM2COL
+from repro.core.dse import identify_parameters
+from repro.core.mapper import evaluate_fixed_mapping, map_network
+from repro.data.pipeline import DataConfig, make_batch
+from repro.launch.steps import make_opt_config, train_step
+from repro.models.model import init_model
+from repro.optim.adamw import init_opt_state
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def mapped_googlenet():
+    g = googlenet(res=56, scale=0.25)
+    hw = identify_parameters(g, max_dim=512)
+    plan = map_network(g, hw=hw)
+    return g, hw, plan
+
+
+def test_dynamap_flow_produces_exact_plan(mapped_googlenet):
+    g, hw, plan = mapped_googlenet
+    assert plan.solver.exact                      # Theorem 4.1 path
+    assert len(plan.assignment) == len(g.conv_nodes())
+    for pol in ("im2col", "kn2row", "winograd"):
+        assert plan.total_cost_s <= \
+            evaluate_fixed_mapping(g, pol, hw=hw) + 1e-12
+
+
+def test_plan_execution_matches_reference(mapped_googlenet):
+    """Algorithm switching is semantically invisible (§3): executing the
+    PBQP-optimal plan equals the im2col-only reference network."""
+    g, hw, plan = mapped_googlenet
+    params = init_params(g, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (56, 56, 3))
+    ref = cnn_forward(g, params, x, plan=None, default_algo=IM2COL)
+    opt = cnn_forward(g, params, x, plan=plan)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_lm_train_loss_decreases():
+    import dataclasses
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    # no warmup + brisk LR so 12 same-batch steps visibly overfit
+    opt_cfg = dataclasses.replace(make_opt_config(cfg, total_steps=30),
+                                  warmup_steps=0, lr=3e-3)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params, opt_cfg)
+    dcfg = DataConfig(seed=0, global_batch=4, seq_len=64)
+    import functools
+    step = jax.jit(functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                                     microbatches=2))
+    losses = []
+    for i in range(12):
+        batch = make_batch(dcfg, cfg, step=0)   # same batch → must overfit
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_train_driver_with_resume(tmp_path):
+    """The launcher end-to-end: train, checkpoint, resume."""
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root"}
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "mamba2-370m", "--reduced", "--batch", "4", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "5",
+            "--log-every", "5"]
+    r1 = subprocess.run(base + ["--steps", "6"], env=env, cwd=str(REPO),
+                        capture_output=True, text=True, timeout=560)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    r2 = subprocess.run(base + ["--steps", "8", "--resume"], env=env,
+                        cwd=str(REPO), capture_output=True, text=True,
+                        timeout=560)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step" in r2.stdout
