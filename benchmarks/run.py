@@ -1,9 +1,17 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,...`` CSV rows (μs-scale latencies are cost-model seconds ×1e6 where
-applicable; derived columns documented per module)."""
+applicable; derived columns documented per module) and lands the same rows
+in ``BENCH_RESULTS.json`` at the repo root so the perf trajectory
+(e.g. the compiled-plan vs eager-loop wall-clock from bench_e2e) is
+machine-readable across PRs.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
@@ -13,6 +21,7 @@ def main() -> None:
     import benchmarks.bench_roofline as br
     import benchmarks.bench_utilization as bu
 
+    results = {}
     for name, mod in (("bench_algorithms", ba), ("bench_utilization", bu),
                       ("bench_dse", bd), ("bench_e2e", be),
                       ("bench_roofline", br)):
@@ -21,9 +30,15 @@ def main() -> None:
             rows = mod.run()
         except Exception as e:  # keep the harness running end to end
             rows = [f"{name},ERROR,{e!r}"]
-        print(f"# === {name} ({time.time() - t0:.1f}s) ===")
+        elapsed = time.time() - t0
+        results[name] = {"elapsed_s": round(elapsed, 1), "rows": rows}
+        print(f"# === {name} ({elapsed:.1f}s) ===")
         print("\n".join(rows))
         print()
+
+    out = REPO / "BENCH_RESULTS.json"
+    out.write_text(json.dumps(results, indent=2))
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
-"""CNN substrate: executable layers, model-graph builders, executor."""
-from repro.cnn.executor import forward, init_params
+"""CNN substrate: Computing Unit overlay, executable layers, model-graph
+builders, eager executor + plan compiler."""
+from repro.cnn.executor import compile_plan, forward, init_params
 from repro.cnn.models import (MODELS, alexnet, googlenet, inception_v4,
                               resnet18, vgg16)
+from repro.cnn.overlay import apply_conv

@@ -1,27 +1,43 @@
 """Graph executor: runs a CNN under a DYNAMAP ExecutionPlan.
 
 The central Computing Unit analogy holds here too: every conv dispatches to
-the same GEMM machinery, only the algorithm wrapper differs per layer
-(algorithm switching, §3). Because all three algorithms compute the same
+the same overlay (``overlay.apply_conv``), only the per-layer binding —
+algorithm wrapper plus dataflow/(p1, p2) GEMM blocks — differs (algorithm
+and dataflow switching, §3). Because all three algorithms compute the same
 convolution, executing under *any* plan must produce identical outputs —
 that invariant is what the integration tests assert.
+
+Two execution modes:
+
+* ``forward`` — eager: Python walks the graph per call, dispatching each
+  layer. Convenient for experiments; slow under traffic.
+* ``compile_plan`` — the plan-compilation pipeline: graph topology and the
+  plan's per-layer algorithm/dataflow choices are lowered to a static
+  spec (``core.mapper.lower_plan``) and closed over at trace time, yielding
+  ONE ``jax.jit``-compiled program per (graph, plan) with no Python dispatch
+  on the hot path. The compiled program is batched: it accepts ``(H, W, C)``
+  or ``(B, H, W, C)`` inputs, so it can serve batched traffic directly
+  (see ``serving.cnn_engine.CNNServingEngine``).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.cnn import layers as L
+from repro.cnn import overlay
 from repro.core.algorithms import Algorithm, IM2COL
 from repro.core.graph import Graph, LayerKind
-from repro.core.mapper import ExecutionPlan
+from repro.core.mapper import ConvLowering, ExecutionPlan, lower_plan
+
+Params = Dict[int, Dict[str, jax.Array]]
 
 
 def init_params(graph: Graph, key: jax.Array,
-                dtype=jnp.float32) -> Dict[int, Dict[str, jax.Array]]:
-    params: Dict[int, Dict[str, jax.Array]] = {}
+                dtype=jnp.float32) -> Params:
+    params: Params = {}
     for nid in graph.topo_order():
         node = graph.nodes[nid]
         if node.kind is LayerKind.CONV:
@@ -42,13 +58,13 @@ def init_params(graph: Graph, key: jax.Array,
     return params
 
 
-def forward(graph: Graph, params: Dict[int, Dict[str, jax.Array]],
-            x: jax.Array, plan: Optional[ExecutionPlan] = None,
-            default_algo: Algorithm = IM2COL,
-            use_pallas: bool = False,
-            interpret: Optional[bool] = None) -> jax.Array:
-    """Run inference. ``x``: (H, W, C) single image (the paper's no-batch
-    low-latency setting)."""
+def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
+                params: Params, x: jax.Array,
+                use_pallas: bool, interpret: Optional[bool]) -> jax.Array:
+    """Walk the graph once; with ``x`` a tracer this IS the trace that
+    ``compile_plan`` stages out — all dict lookups and dispatch below happen
+    at trace time only."""
+    batched = x.ndim == 4
     values: Dict[int, jax.Array] = {}
     for nid in graph.topo_order():
         node = graph.nodes[nid]
@@ -58,13 +74,14 @@ def forward(graph: Graph, params: Dict[int, Dict[str, jax.Array]],
             continue
         ins = [values[p] for p in preds]
         if node.kind is LayerKind.CONV:
-            algo = (plan.assignment.get(nid, default_algo) if plan
-                    else default_algo)
+            low = lowering[nid]
             m = node.conv
             pad = "SAME" if m.pad == "same" else "VALID"
-            y = L.conv2d(ins[0], params[nid]["w"], algo, stride=m.stride,
-                         padding=pad, use_pallas=use_pallas,
-                         interpret=interpret)
+            y = overlay.apply_conv(ins[0], params[nid]["w"], low.algo,
+                                   low.dataflow, low.p1, low.p2,
+                                   stride=m.stride, padding=pad,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
             values[nid] = L.relu(y)
         elif node.kind is LayerKind.POOL_MAX:
             pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
@@ -79,9 +96,13 @@ def forward(graph: Graph, params: Dict[int, Dict[str, jax.Array]],
         elif node.kind is LayerKind.ADD:
             values[nid] = L.relu(sum(ins))
         elif node.kind is LayerKind.GLOBAL_POOL:
-            values[nid] = L.global_avg_pool(ins[0])[None, None, :]
+            gap = L.global_avg_pool(ins[0])          # (C,) or (B, C)
+            values[nid] = (gap[:, None, None, :] if batched
+                           else gap[None, None, :])
         elif node.kind is LayerKind.FC:
-            values[nid] = L.fc(ins[0], params[nid]["w"], params[nid]["b"])
+            flat = (ins[0].reshape(ins[0].shape[0], -1) if batched
+                    else ins[0].reshape(-1))
+            values[nid] = L.fc(flat, params[nid]["w"], params[nid]["b"])
         elif node.kind is LayerKind.SOFTMAX:
             values[nid] = jax.nn.softmax(ins[0])
         elif node.kind is LayerKind.OUTPUT:
@@ -89,3 +110,41 @@ def forward(graph: Graph, params: Dict[int, Dict[str, jax.Array]],
         else:
             raise ValueError(f"unhandled node kind {node.kind}")
     return values[graph.sink()]
+
+
+def forward(graph: Graph, params: Params,
+            x: jax.Array, plan: Optional[ExecutionPlan] = None,
+            default_algo: Algorithm = IM2COL,
+            use_pallas: bool = False,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Eager inference. ``x``: (H, W, C) single image (the paper's no-batch
+    low-latency setting) or (B, H, W, C) batch. Each call re-interprets the
+    plan in Python — use ``compile_plan`` for the dispatch-free hot path."""
+    lowering = lower_plan(graph, plan, default_algo)
+    return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
+
+
+def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
+                 default_algo: Algorithm = IM2COL,
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None
+                 ) -> Callable[[Params, jax.Array], jax.Array]:
+    """Lower (graph, plan) into one jit-compiled overlay program.
+
+    Returns ``run(params, x) -> logits`` with ``x``: (H, W, C) or
+    (B, H, W, C). The graph topology and every per-layer algorithm and
+    dataflow/(p1, p2) block binding are resolved *now* into a static
+    ``ConvLowering`` spec and closed over, so the traced program contains
+    no Python dispatch; XLA sees the whole network and can fuse across
+    layers. (``plan.store_formats`` stays cost-model-only for now — see
+    ROADMAP.) One compilation is cached per input shape/dtype (batch sizes
+    compile once each — pad to a fixed batch to avoid recompilation, as
+    ``CNNServingEngine`` does).
+    """
+    lowering = lower_plan(graph, plan, default_algo)
+
+    @jax.jit
+    def run(params: Params, x: jax.Array) -> jax.Array:
+        return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
+
+    return run

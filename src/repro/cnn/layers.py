@@ -1,10 +1,11 @@
-"""Executable CNN layers with per-layer algorithm dispatch.
+"""Executable non-conv CNN layers (pool / norm / FC helpers).
 
-Every conv can run under any of the paper's three algorithm families; the
-``use_pallas`` switch picks between the Pallas kernels (interpret-mode on
-CPU, compiled on TPU) and the pure-jnp reference implementations (fast on
-CPU — used for full-network functional tests). Both paths are validated
-against ``jax.lax.conv_general_dilated`` in tests/.
+Convolutions live on the Computing Unit overlay (``overlay.apply_conv``) —
+the single entry point for all conv algorithms; the executor calls it
+directly with the plan's per-layer binding.
+
+All layers here are rank-polymorphic: they accept a single image
+``(H, W, C)`` or a batch ``(B, H, W, C)`` and preserve the input rank.
 """
 from __future__ import annotations
 
@@ -13,69 +14,43 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms import Algorithm, AlgoFamily
-from repro.kernels.conv_im2col.ops import conv_im2col
-from repro.kernels.conv_im2col.ref import conv_ref, conv_via_toeplitz_ref
-from repro.kernels.kn2row.ops import conv_kn2row
-from repro.kernels.kn2row.ref import kn2row_ref
-from repro.kernels.winograd.ops import conv_winograd
-from repro.kernels.winograd.ref import winograd_ref
-
-
-def conv2d(x: jax.Array, w: jax.Array, algo: Algorithm, stride: int = 1,
-           padding: str = "SAME", use_pallas: bool = False,
-           interpret: Optional[bool] = None) -> jax.Array:
-    """x: (H, W, Cin), w: (K1, K2, Cin, Cout)."""
-    fam = algo.family
-    if fam is AlgoFamily.IM2COL:
-        if use_pallas:
-            return conv_im2col(x, w, stride=stride, padding=padding,
-                               interpret=interpret)
-        return conv_via_toeplitz_ref(x, w, stride=stride, padding=padding)
-    if fam is AlgoFamily.KN2ROW:
-        if use_pallas:
-            return conv_kn2row(x, w, stride=stride, padding=padding,
-                               interpret=interpret)
-        return kn2row_ref(x, w, stride=stride, padding=padding)
-    # Winograd — stride-1 square kernels only (menu_for guarantees this);
-    # non-square/strided layers never receive a Winograd assignment.
-    assert stride == 1 and w.shape[0] == w.shape[1]
-    if use_pallas:
-        return conv_winograd(x, w, m=algo.m, padding=padding,
-                             interpret=interpret)
-    if w.shape[0] == 3:
-        return winograd_ref(x, w, m=algo.m, padding=padding)
-    # K>r multi-round path has no standalone jnp ref; fall back to the
-    # Pallas implementation in interpret mode (still winograd math).
-    return conv_winograd(x, w, m=algo.m, padding=padding, interpret=True)
-
 
 def relu(x: jax.Array) -> jax.Array:
     return jnp.maximum(x, 0)
 
 
+def _window(x: jax.Array, k: int, stride: int):
+    """Window/stride tuples covering an optional leading batch dim."""
+    lead = (1,) * (x.ndim - 3)
+    return lead + (k, k, 1), lead + (stride, stride, 1)
+
+
 def max_pool(x: jax.Array, k: int, stride: int,
              padding: str = "SAME") -> jax.Array:
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (k, k, 1), (stride, stride, 1), padding)
+    win, strides = _window(x, k, stride)
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, win, strides,
+                                 padding)
 
 
 def avg_pool(x: jax.Array, k: int, stride: int,
              padding: str = "SAME") -> jax.Array:
     """§3.4: AvgPool expressed as a K×K conv with 1/(K1·K2) weights —
     we keep that formulation so it can route through the GEMM unit."""
-    s = jax.lax.reduce_window(
-        x, 0.0, jax.lax.add, (k, k, 1), (stride, stride, 1), padding)
-    n = jax.lax.reduce_window(
-        jnp.ones_like(x), 0.0, jax.lax.add, (k, k, 1), (stride, stride, 1),
-        padding)
+    win, strides = _window(x, k, stride)
+    s = jax.lax.reduce_window(x, 0.0, jax.lax.add, win, strides, padding)
+    n = jax.lax.reduce_window(jnp.ones_like(x), 0.0, jax.lax.add, win,
+                              strides, padding)
     return s / n
 
 
 def global_avg_pool(x: jax.Array) -> jax.Array:
-    return jnp.mean(x, axis=(0, 1))
+    """(…, H, W, C) → (…, C)."""
+    return jnp.mean(x, axis=(-3, -2))
 
 
 def fc(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
-    y = x.reshape(-1) @ w
+    """Fully connected layer over pre-flattened features: x is (f,) or
+    (B, f). The executor flattens — it knows whether a batch dim exists;
+    this layer never guesses from rank."""
+    y = x @ w
     return y + b if b is not None else y

@@ -1,0 +1,73 @@
+"""The DYNAMAP Computing Unit overlay — single entry point for every conv.
+
+The paper's §3 overlay is one GEMM engine reused by all layers; per layer
+only the *algorithm wrapper* (im2col / kn2row / Winograd) and the *dataflow
+binding* of the (P_SA1, P_SA2) array dims change. ``apply_conv`` is that
+unit in software: it takes the plan's per-layer ``(algo, dataflow, p1, p2)``
+and routes the convolution through the dataflow-bound GEMM blocks in
+``kernels/gemm`` (Pallas path) or the pure-jnp oracles (reference path).
+
+Batching semantics: every path accepts a single image ``(H, W, C)`` or a
+batch ``(B, H, W, C)`` and returns the matching rank. The Pallas kernels
+batch through ``pallas_call``'s batching rule (an outer grid dimension), so
+the compiled overlay program serves batched traffic without Python dispatch.
+
+``compile_plan`` (executor.py) closes over these per-layer bindings at trace
+time; tests monkeypatch this module's ``apply_conv`` to observe exactly
+which (algorithm, dataflow) each layer was lowered with.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.algorithms import Algorithm, AlgoFamily
+from repro.core.cost_model import Dataflow
+from repro.kernels.conv_im2col.ops import conv_im2col
+from repro.kernels.conv_im2col.ref import conv_via_toeplitz_ref
+from repro.kernels.kn2row.ops import conv_kn2row
+from repro.kernels.kn2row.ref import kn2row_ref
+from repro.kernels.winograd.ops import conv_winograd
+from repro.kernels.winograd.ref import winograd_ref
+
+
+def apply_conv(x: jax.Array, w: jax.Array, algo: Algorithm,
+               dataflow: Dataflow = Dataflow.NS,
+               p1: int = 128, p2: int = 128, *,
+               stride: int = 1, padding: str = "SAME",
+               use_pallas: bool = False,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Run one conv layer on the overlay under a plan binding.
+
+    x: (H, W, Cin) or (B, H, W, Cin); w: (K1, K2, Cin, Cout).
+    ``dataflow``/(p1, p2) select the Eq. 9 GEMM block binding — they only
+    shape the Pallas execution schedule, never the math, so any binding
+    produces identical outputs (the §3 invariant the tests assert).
+    """
+    fam = algo.family
+    if fam is AlgoFamily.IM2COL:
+        if use_pallas:
+            return conv_im2col(x, w, stride=stride, padding=padding,
+                               dataflow=dataflow, p1=p1, p2=p2,
+                               interpret=interpret)
+        return conv_via_toeplitz_ref(x, w, stride=stride, padding=padding)
+    if fam is AlgoFamily.KN2ROW:
+        if use_pallas:
+            return conv_kn2row(x, w, stride=stride, padding=padding,
+                               dataflow=dataflow, p1=p1, p2=p2,
+                               interpret=interpret)
+        return kn2row_ref(x, w, stride=stride, padding=padding)
+    # Winograd — stride-1 square kernels only (menu_for guarantees this);
+    # non-square/strided layers never receive a Winograd assignment.
+    assert stride == 1 and w.shape[0] == w.shape[1]
+    if use_pallas:
+        return conv_winograd(x, w, m=algo.m, padding=padding,
+                             dataflow=dataflow, p1=p1, p2=p2,
+                             interpret=interpret)
+    if w.shape[0] == 3:
+        return winograd_ref(x, w, m=algo.m, padding=padding)
+    # K>r multi-round path has no standalone jnp ref; fall back to the
+    # Pallas implementation in interpret mode (still winograd math).
+    return conv_winograd(x, w, m=algo.m, padding=padding,
+                         dataflow=dataflow, p1=p1, p2=p2, interpret=True)

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.graph import ConvMeta
 
@@ -64,9 +64,12 @@ class Algorithm:
     def applicable(self, conv: ConvMeta) -> bool:
         if self.family is AlgoFamily.WINOGRAD:
             # Paper §6.1.2: Winograd applied on layers with square-shaped
-            # kernels; F(m,r) needs stride 1 and a kernel at least r wide
-            # in each dim is run in ceil(K1K2/r^2) rounds.
-            return (conv.k1 == conv.k2 and conv.k1 >= 2 and conv.stride == 1)
+            # kernels; F(m,r) needs stride 1. Kernels wider than r run in
+            # ceil(K1K2/r^2) rounds of r×r sub-kernels; kernels *smaller*
+            # than r would be zero-padded up to r, wasting multiplies with
+            # no accuracy in the cost model — so the menu requires K ≥ r.
+            return (conv.k1 == conv.k2 and conv.k1 >= self.r
+                    and conv.stride == 1)
         if self.family is AlgoFamily.KN2ROW:
             # kn2row decomposes into K1K2 unit convs; stride>1 handled by
             # strided sampling of the accumulate phase — supported.
@@ -109,7 +112,8 @@ DEFAULT_MENU: List[Algorithm] = [IM2COL, KN2ROW, WINO_2_3, WINO_4_3]
 PAPER_MENU: List[Algorithm] = [IM2COL, KN2ROW, WINO_2_3]
 
 
-def menu_for(conv: ConvMeta, menu: List[Algorithm] = None) -> List[Algorithm]:
+def menu_for(conv: ConvMeta,
+             menu: Optional[List[Algorithm]] = None) -> List[Algorithm]:
     menu = DEFAULT_MENU if menu is None else menu
     out = [a for a in menu if a.applicable(conv)]
     if not out:

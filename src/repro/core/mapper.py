@@ -60,6 +60,37 @@ class ExecutionPlan:
     choices: Dict[int, NodeChoices]
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvLowering:
+    """Static per-conv-layer binding the compiled overlay closes over:
+    everything the Computing Unit needs to execute one layer — algorithm
+    wrapper plus the Eq. 9 dataflow/(p1, p2) GEMM block binding. Hashable,
+    so a (graph, lowering) pair keys one jit-compiled program."""
+    algo: Algorithm
+    dataflow: Dataflow
+    p1: int
+    p2: int
+
+
+def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
+               default_algo: Algorithm = IM2COL) -> Dict[int, ConvLowering]:
+    """Lower an ExecutionPlan to the static spec consumed at trace time.
+
+    With ``plan=None`` every conv gets ``default_algo`` under the NS
+    dataflow on a 128×128 virtual array (the paper's unconfigured overlay).
+    """
+    out: Dict[int, ConvLowering] = {}
+    for nid in (n.id for n in graph.conv_nodes()):
+        if plan is None:
+            out[nid] = ConvLowering(default_algo, Dataflow.NS, 128, 128)
+        else:
+            out[nid] = ConvLowering(
+                plan.assignment.get(nid, default_algo),
+                plan.dataflows.get(nid, Dataflow.NS),
+                plan.p1, plan.p2)
+    return out
+
+
 def _layer_out(node: LayerNode) -> Tuple[int, int, int]:
     """(H, W, C) of a node's output; builders annotate non-conv nodes."""
     if node.conv is not None:

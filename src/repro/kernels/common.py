@@ -1,6 +1,7 @@
 """Shared helpers for the Pallas kernels."""
 from __future__ import annotations
 
+import functools
 import os
 from typing import Sequence, Tuple
 
@@ -20,6 +21,22 @@ def pad_to(x: jax.Array, multiples: Sequence[int]) -> jax.Array:
     if all(p == (0, 0) for p in pads):
         return x
     return jnp.pad(x, pads)
+
+
+def batchable(fn):
+    """Lift a single-image conv ``fn(x: (H, W, C), ...)`` to also accept a
+    batched ``(B, H, W, C)`` input by vmapping over the leading axis.
+
+    Pallas kernels batch via ``pallas_call``'s batching rule (an extra outer
+    grid dimension), so one compiled program serves the whole batch; the
+    jnp reference paths batch for free.
+    """
+    @functools.wraps(fn)
+    def wrapper(x, *args, **kwargs):
+        if x.ndim == 4:
+            return jax.vmap(lambda xi: fn(xi, *args, **kwargs))(x)
+        return fn(x, *args, **kwargs)
+    return wrapper
 
 
 def default_interpret() -> bool:

@@ -1,4 +1,13 @@
-"""Public wrapper for the implicit-GEMM im2col convolution."""
+"""Public wrapper for the implicit-GEMM im2col convolution.
+
+The induced GEMM is (O1·O2, K1K2·Cin) × (K1K2·Cin, Cout); the plan's
+dataflow binds (p1, p2) onto two of those dims (Eq. 9) and this wrapper
+translates that binding into the kernel's (output-row, C_out) tiling:
+the M-dim block covers ~bm GEMM rows (bo1 = bm // O2 output rows), the
+N-dim block is bn. The K panel is held entirely in VMEM by construction
+(the whole feature map is kernel-resident), so the streamed dim needs no
+tile. Accepts (H, W, Cin) or batched (B, H, W, Cin) inputs.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,17 +16,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import ceil_to, default_interpret
+from repro.core.cost_model import Dataflow
+from repro.kernels.common import batchable, ceil_to, default_interpret
 from repro.kernels.conv_im2col.conv_im2col import conv_im2col_call
+from repro.kernels.gemm.ops import dataflow_blocks
 
 
+@batchable
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "bo1", "bc", "interpret"))
+    "stride", "padding", "dataflow", "p1", "p2", "interpret"))
 def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
-                padding: str = "SAME", bo1: int = 8, bc: int = 128,
+                padding: str = "SAME",
+                dataflow: Dataflow = Dataflow.NS,
+                p1: int = 128, p2: int = 128,
                 interpret: Optional[bool] = None) -> jax.Array:
-    """Convolution via the im2col algorithm. x: (H, W, Cin),
-    w: (K1, K2, Cin, Cout) → (O1, O2, Cout)."""
+    """Convolution via the im2col algorithm. x: (H, W, Cin) or (B, H, W, Cin),
+    w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout)."""
     interpret = default_interpret() if interpret is None else interpret
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
@@ -31,7 +45,8 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
         o1 = (h - k1) // stride + 1
         o2 = (w_dim - k2) // stride + 1
         xp = x
-    bo1 = min(bo1, o1)
+    bm, bn, _ = dataflow_blocks(dataflow, p1, p2)
+    bo1 = min(max(1, bm // o2), o1)
     o1p = ceil_to(o1, bo1)
     # Extra bottom/right rows so the last block's window slices stay in
     # bounds (they produce rows we slice off afterwards).
@@ -39,7 +54,7 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
     need_c = (o2 - 1) * stride + k2
     xp = jnp.pad(xp, ((0, max(0, need_r - xp.shape[0])),
                       (0, max(0, need_c - xp.shape[1])), (0, 0)))
-    bc = min(bc, ceil_to(c_out, 128))
+    bc = min(bn, ceil_to(c_out, 128))
     c_outp = ceil_to(c_out, bc)
     wm = w.reshape(k1 * k2 * c_in, c_out)
     wm = jnp.pad(wm, ((0, 0), (0, c_outp - c_out)))

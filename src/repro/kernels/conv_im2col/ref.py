@@ -5,15 +5,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import batchable
+
 
 def conv_ref(x: jax.Array, w: jax.Array, stride: int = 1,
              padding: str = "SAME") -> jax.Array:
-    """x: (H, W, Cin); w: (K1, K2, Cin, Cout) → (O1, O2, Cout)."""
+    """x: (H, W, Cin) or (B, H, W, Cin); w: (K1, K2, Cin, Cout)."""
+    single = x.ndim == 3
+    xb = x[None] if single else x
     out = jax.lax.conv_general_dilated(
-        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        xb.astype(jnp.float32), w.astype(jnp.float32),
         window_strides=(stride, stride), padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return out[0].astype(x.dtype)
+    return (out[0] if single else out).astype(x.dtype)
 
 
 def toeplitz_ref(x: jax.Array, k1: int, k2: int, stride: int = 1,
@@ -39,6 +43,7 @@ def toeplitz_ref(x: jax.Array, k1: int, k2: int, stride: int = 1,
     return jnp.concatenate(cols, axis=1)
 
 
+@batchable
 def conv_via_toeplitz_ref(x: jax.Array, w: jax.Array, stride: int = 1,
                           padding: str = "SAME") -> jax.Array:
     k1, k2, c_in, c_out = w.shape

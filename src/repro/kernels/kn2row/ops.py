@@ -1,5 +1,11 @@
 """Public wrapper: full kn2row convolution = batched unit-conv GEMMs
-(Pallas) + pad-and-accumulate (Pallas)."""
+(Pallas) + pad-and-accumulate (Pallas).
+
+The unit-conv GEMM is (H·W, Cin) × (Cin, Cout); the plan's dataflow binds
+(p1, p2) straight onto the (bm, bn, bk) block dims via Eq. 9 — kn2row is the
+one algorithm whose GEMM shape matches the binding with no translation.
+Accepts (H, W, Cin) or batched (B, H, W, Cin) inputs.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,16 +14,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import ceil_to, default_interpret
+from repro.core.cost_model import Dataflow
+from repro.kernels.common import batchable, ceil_to, default_interpret
+from repro.kernels.gemm.ops import dataflow_blocks
 from repro.kernels.kn2row.kn2row import pad_accumulate, unit_conv_gemms
 
 
+@batchable
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "bm", "bn", "interpret"))
+    "stride", "padding", "dataflow", "p1", "p2", "interpret"))
 def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
-                padding: str = "SAME", bm: int = 128, bn: int = 128,
+                padding: str = "SAME",
+                dataflow: Dataflow = Dataflow.NS,
+                p1: int = 128, p2: int = 128,
                 interpret: Optional[bool] = None) -> jax.Array:
-    """Convolution via kn2row. x: (H, W, Cin), w: (K1, K2, Cin, Cout)."""
+    """Convolution via kn2row. x: (H, W, Cin) or (B, H, W, Cin),
+    w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout)."""
     interpret = default_interpret() if interpret is None else interpret
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
@@ -31,11 +43,12 @@ def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
         o2 = (w_dim - k2) // stride + 1
         pt = pl_ = 0
 
-    # Phase 1: (H*W, Cin) @ (K1K2, Cin, Cout).
+    # Phase 1: (H*W, Cin) @ (K1K2, Cin, Cout) under the plan's block binding.
+    bm, bn, bk = dataflow_blocks(dataflow, p1, p2)
     m = h * w_dim
     bm_ = min(bm, ceil_to(m, 8))
     bn_ = min(bn, ceil_to(c_out, 128))
-    bk_ = min(512, ceil_to(c_in, 128))
+    bk_ = min(bk, ceil_to(c_in, 128))
     mp, np_, kp = ceil_to(m, bm_), ceil_to(c_out, bn_), ceil_to(c_in, bk_)
     x2d = jnp.pad(x.reshape(m, c_in), ((0, mp - m), (0, kp - c_in)))
     wk = jnp.pad(w.reshape(k1 * k2, c_in, c_out),

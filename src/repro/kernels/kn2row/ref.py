@@ -4,10 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import batchable
 
+
+@batchable
 def kn2row_ref(x: jax.Array, w: jax.Array, stride: int = 1,
                padding: str = "SAME") -> jax.Array:
-    """x: (H, W, Cin); w: (K1, K2, Cin, Cout)."""
+    """x: (H, W, Cin) or (B, H, W, Cin); w: (K1, K2, Cin, Cout)."""
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
     if padding == "SAME":

@@ -1,5 +1,11 @@
 """Public Winograd conv: transforms (Pallas) + batched GEMM (Pallas),
-with the multi-round decomposition for kernels larger than r×r."""
+with the multi-round decomposition for kernels larger than r×r.
+
+The transform-space Hadamard products are (tiles, Cin) × (Cin, Cout) GEMMs
+batched over the (m+r-1)² tile positions; the plan's dataflow/(p1, p2)
+binding is forwarded to that batched GEMM's block dims (Eq. 9).
+Accepts (H, W, Cin) or batched (B, H, W, Cin) inputs.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,7 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import ceil_to, default_interpret
+from repro.core.cost_model import Dataflow
+from repro.kernels.common import batchable, ceil_to, default_interpret
 from repro.kernels.gemm.ops import batched_gemm
 from repro.kernels.winograd.winograd import (input_transform, matrices,
                                              output_transform,
@@ -16,7 +23,8 @@ from repro.kernels.winograd.winograd import (input_transform, matrices,
 
 
 def _conv_f_mr(x: jax.Array, w: jax.Array, m: int, o1: int, o2: int,
-               pt: int, pl_: int, interpret: bool) -> jax.Array:
+               pt: int, pl_: int, dataflow: Dataflow, p1: int, p2: int,
+               interpret: bool) -> jax.Array:
     """Single-round F(m,r) same-stride-1 conv core; x unpadded (H, W, Cin)."""
     r = w.shape[0]
     t = m + r - 1
@@ -29,16 +37,21 @@ def _conv_f_mr(x: jax.Array, w: jax.Array, m: int, o1: int, o2: int,
     v = input_transform(xp, m=m, r=r, tiles_y=ty, tiles_x=tx,
                         interpret=interpret)          # (T², n_tiles, Cin)
     u = transform_kernel_weights(w, m, r).astype(x.dtype)  # (T², Cin, Cout)
-    mm = batched_gemm(v, u, interpret=interpret,
+    mm = batched_gemm(v, u, dataflow=dataflow, p1=p1, p2=p2,
+                      interpret=interpret,
                       out_dtype=x.dtype)              # (T², n_tiles, Cout)
     y = output_transform(mm, m=m, r=r, tiles_y=ty, tiles_x=tx,
                          interpret=interpret)
     return y[:o1, :o2, :c_out]
 
 
-@functools.partial(jax.jit, static_argnames=("m", "padding", "interpret"))
+@batchable
+@functools.partial(jax.jit, static_argnames=(
+    "m", "padding", "dataflow", "p1", "p2", "interpret"))
 def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
                   padding: str = "SAME",
+                  dataflow: Dataflow = Dataflow.NS,
+                  p1: int = 128, p2: int = 128,
                   interpret: Optional[bool] = None) -> jax.Array:
     """Winograd convolution, stride 1, square K×K kernels.
 
@@ -59,7 +72,8 @@ def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
         pt_full = pl_full = 0
 
     if k1 == r:
-        return _conv_f_mr(x, w, m, o1, o2, pt_full, pl_full, interpret)
+        return _conv_f_mr(x, w, m, o1, o2, pt_full, pl_full,
+                          dataflow, p1, p2, interpret)
 
     # Multi-round: pad kernel to multiple of r and accumulate shifted rounds.
     rounds = -(-k1 // r)
@@ -76,5 +90,6 @@ def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
                 xbig, (ry * r, rx * r, 0),
                 (o1 + r - 1, o2 + r - 1, c_in))
             # VALID conv of xs with sub gives exactly (o1, o2).
-            acc = acc + _conv_f_mr(xs, sub, m, o1, o2, 0, 0, interpret)
+            acc = acc + _conv_f_mr(xs, sub, m, o1, o2, 0, 0,
+                                   dataflow, p1, p2, interpret)
     return acc

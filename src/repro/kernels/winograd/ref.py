@@ -4,12 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import batchable
 from repro.kernels.winograd.winograd import matrices
 
 
+@batchable
 def winograd_ref(x: jax.Array, w: jax.Array, m: int = 2,
                  padding: str = "SAME") -> jax.Array:
-    """x: (H, W, Cin); w: (r, r, Cin, Cout), stride 1.
+    """x: (H, W, Cin) or (B, H, W, Cin); w: (r, r, Cin, Cout), stride 1.
 
     Y = Aᵀ [ (G g Gᵀ) ⊙ (Bᵀ d B) ] A, reduced over C_in in transform space
     (the amortization noted under Eq. 5), tiles concatenated back.

@@ -1,0 +1,90 @@
+"""Batched CNN serving engine over a compiled overlay program.
+
+Mirrors ``serving.engine``'s queue/slot pattern for the CNN side: incoming
+single-image requests queue up; each tick packs up to ``batch_size`` of them
+into one fixed-shape batch and runs the ``compile_plan``-lowered program —
+one XLA dispatch for the whole batch, no per-request Python graph walk.
+
+The batch shape is fixed (short ticks are zero-padded) so exactly one
+compiled executable serves all traffic; there is no recompilation between
+a full batch and a trailing partial one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.cnn.executor import compile_plan
+from repro.core.algorithms import Algorithm, IM2COL
+from repro.core.graph import Graph
+from repro.core.mapper import ExecutionPlan
+
+
+@dataclasses.dataclass
+class CNNRequest:
+    rid: int
+    image: np.ndarray                  # (H, W, C)
+
+
+class CNNServingEngine:
+    """Batches single-image requests through one compiled plan."""
+
+    def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
+                 batch_size: int = 8,
+                 default_algo: Algorithm = IM2COL,
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None,
+                 dtype=np.float32) -> None:
+        self.graph = graph
+        self.params = params
+        self.b = batch_size
+        self.dtype = np.dtype(dtype)
+        self.queue: List[CNNRequest] = []
+        self.done: Dict[int, np.ndarray] = {}
+        # The graph's input node pins the only image shape the compiled
+        # program can accept — validate against it, never against traffic.
+        src = graph.nodes[graph.source()]
+        self._shape = tuple(int(d) for d in src.attrs["out_shape"])
+        self._run = compile_plan(graph, plan, default_algo=default_algo,
+                                 use_pallas=use_pallas, interpret=interpret)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: CNNRequest) -> None:
+        """Enqueue one request. Images are cast to the engine dtype and
+        validated against the graph's (H, W, C) input shape here, so a bad
+        request can never crash a tick or drag good requests down with
+        it."""
+        img = np.asarray(req.image, dtype=self.dtype)
+        if img.shape != self._shape:
+            raise ValueError(
+                f"request {req.rid}: image shape {img.shape} != "
+                f"graph input shape {self._shape}")
+        req.image = img                # persist the validated array
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- serve
+    def step(self) -> int:
+        """One engine tick: pack up to ``batch_size`` queued requests into
+        the fixed-shape batch, run the compiled program once, scatter the
+        outputs. Returns the number of requests served."""
+        if not self.queue:
+            return 0
+        batch, self.queue = self.queue[:self.b], self.queue[self.b:]
+        x = np.zeros((self.b,) + batch[0].image.shape,
+                     dtype=batch[0].image.dtype)
+        for i, req in enumerate(batch):
+            x[i] = req.image
+        out = jax.block_until_ready(self._run(self.params, x))
+        out = np.asarray(out)
+        for i, req in enumerate(batch):
+            self.done[req.rid] = out[i]
+        return len(batch)
+
+    def run_until_done(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:
+        for _ in range(max_ticks):
+            if self.step() == 0:
+                break
+        return self.done

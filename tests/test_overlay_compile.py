@@ -1,0 +1,238 @@
+"""Compiled overlay engine: batched plan-vs-reference equivalence and
+plan-honoring (the §3 invariant, now enforced on the compiled path).
+
+* ``compile_plan(graph, plan)`` on a batch must match per-image eager
+  ``forward`` AND a ``jax.lax.conv_general_dilated``-backed reference.
+* The compiled program must invoke the overlay with exactly the algorithm
+  and dataflow/(p1, p2) the ExecutionPlan assigned to each conv layer.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn import overlay
+from repro.cnn.executor import compile_plan, forward, init_params
+from repro.cnn.models import googlenet, vgg16
+from repro.core.algorithms import IM2COL, KN2ROW, WINO_2_3, menu_for
+from repro.core.cost_model import Dataflow
+from repro.core.dse import identify_parameters
+from repro.core.graph import LayerKind
+from repro.core.mapper import lower_plan, map_network
+from repro.kernels.conv_im2col.ref import conv_ref
+
+RNG = np.random.default_rng(0)
+
+
+def rnd(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def mapped_googlenet():
+    g = googlenet(res=56, scale=0.25)
+    hw = identify_parameters(g, max_dim=512)
+    plan = map_network(g, hw=hw)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, plan, params
+
+
+@pytest.fixture(scope="module")
+def mixed_plan(mapped_googlenet):
+    """The mapped plan with algorithm diversity forced: cycle each conv
+    through its applicable menu so all three families (and all three
+    dataflows) appear — execution must stay semantically identical."""
+    g, plan, _ = mapped_googlenet
+    assignment, dataflows = {}, {}
+    dfs = list(Dataflow)
+    for i, nid in enumerate(sorted(plan.assignment)):
+        menu = menu_for(g.nodes[nid].conv)
+        assignment[nid] = menu[i % len(menu)]
+        dataflows[nid] = dfs[i % len(dfs)]
+    return dataclasses.replace(plan, assignment=assignment,
+                               dataflows=dataflows)
+
+
+def _lax_forward(graph, params, x):
+    """Reference executor: same graph walk, conv replaced by lax.conv."""
+    def lax_conv(xi, w, algo, dataflow=Dataflow.NS, p1=128, p2=128, *,
+                 stride=1, padding="SAME", **kw):
+        return conv_ref(xi, w, stride=stride, padding=padding)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(overlay, "apply_conv", lax_conv)
+        return forward(graph, params, x)
+
+
+# ------------------------------------------------- batched overlay paths
+@pytest.mark.parametrize("algo", [IM2COL, KN2ROW, WINO_2_3])
+@pytest.mark.parametrize("df", list(Dataflow))
+def test_overlay_batched_matches_lax_all_paths(algo, df):
+    """Every algorithm family accepts (B, H, W, C) on both the reference
+    and Pallas paths, under every dataflow block binding."""
+    x, w = rnd(3, 14, 14, 6), rnd(3, 3, 6, 8)
+    want = conv_ref(x, w)
+    for use_pallas in (False, True):
+        got = overlay.apply_conv(x, w, algo, df, 256, 128,
+                                 use_pallas=use_pallas, interpret=True)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-3, atol=5e-3)
+    # batch == stacked single images (rank polymorphism is consistent)
+    per = jnp.stack([overlay.apply_conv(x[i], w, algo, df, 256, 128)
+                     for i in range(x.shape[0])])
+    batched = overlay.apply_conv(x, w, algo, df, 256, 128)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(per),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------- compiled plan ≡ eager ≡ lax ref
+@pytest.mark.parametrize("algo", [IM2COL, KN2ROW, WINO_2_3])
+def test_compile_plan_batched_per_family(algo):
+    """A fixed-algorithm "plan" per family: compiled batched execution
+    matches per-image eager forward and the lax reference."""
+    g = vgg16(res=16, scale=0.05)          # 3x3 stride-1: all families apply
+    params = init_params(g, jax.random.PRNGKey(2))
+    xb = rnd(3, 16, 16, 3)
+    run = compile_plan(g, default_algo=algo)
+    got = run(params, xb)
+    per = jnp.stack([forward(g, params, xb[i], default_algo=algo)
+                     for i in range(xb.shape[0])])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(per),
+                               rtol=1e-4, atol=1e-5)
+    ref = _lax_forward(g, params, xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_compile_plan_batched_matches_eager_and_lax(mapped_googlenet):
+    """The mapped reduced-GoogleNet plan, batched through one compiled
+    program, equals the per-image eager loop and the lax reference."""
+    g, plan, params = mapped_googlenet
+    xb = rnd(3, 56, 56, 3)
+    run = compile_plan(g, plan)
+    got = run(params, xb)
+    assert got.shape == (3, 1000)
+    per = jnp.stack([forward(g, params, xb[i], plan=plan)
+                     for i in range(xb.shape[0])])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(per),
+                               rtol=1e-4, atol=1e-5)
+    ref = _lax_forward(g, params, xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_compile_plan_mixed_algorithms_still_equivalent(mapped_googlenet,
+                                                        mixed_plan):
+    """Algorithm AND dataflow switching are semantically invisible on the
+    compiled batched path (the §3 invariant)."""
+    g, _, params = mapped_googlenet
+    xb = rnd(2, 56, 56, 3)
+    got = compile_plan(g, mixed_plan)(params, xb)
+    ref = _lax_forward(g, params, xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_compile_plan_single_image_rank(mapped_googlenet):
+    g, plan, params = mapped_googlenet
+    x = rnd(56, 56, 3)
+    run = compile_plan(g, plan)
+    y = run(params, x)
+    assert y.shape == (1000,)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(forward(g, params, x, plan=plan)),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------- plan honoring
+def test_compiled_execution_honors_plan(mapped_googlenet, mixed_plan,
+                                        monkeypatch):
+    """Trace the overlay entry point: the compiled program must hit every
+    conv layer with exactly the plan-assigned (algorithm, dataflow, p1, p2).
+    The trace order is the executor's topo walk, so the call sequence maps
+    1:1 onto conv nodes in topological order."""
+    g, _, params = mapped_googlenet
+    plan = mixed_plan
+    seen = []
+    real = overlay.apply_conv
+
+    def spy(x, w, algo, dataflow=Dataflow.NS, p1=128, p2=128, **kw):
+        seen.append((algo, dataflow, p1, p2))
+        return real(x, w, algo, dataflow, p1, p2, **kw)
+
+    monkeypatch.setattr(overlay, "apply_conv", spy)
+    run = compile_plan(g, plan)
+    run(params, rnd(2, 56, 56, 3))        # first call traces → spy fires
+
+    conv_ids = [nid for nid in g.topo_order()
+                if g.nodes[nid].kind is LayerKind.CONV]
+    assert len(seen) == len(conv_ids)
+    lowering = lower_plan(g, plan)
+    for nid, (algo, df, p1, p2) in zip(conv_ids, seen):
+        low = lowering[nid]
+        assert algo == plan.assignment[nid] == low.algo
+        assert df == plan.dataflows[nid] == low.dataflow
+        assert (p1, p2) == (plan.p1, plan.p2)
+    # the mixed plan exercises algorithm AND dataflow switching for real
+    assert len({a.family for (a, _, _, _) in seen}) == 3
+    assert len({d for (_, d, _, _) in seen}) == 3
+
+
+def test_eager_forward_honors_plan(mapped_googlenet, monkeypatch):
+    """Same invariant on the eager path (shared lowering spec)."""
+    g, plan, params = mapped_googlenet
+    seen = []
+    real = overlay.apply_conv
+
+    def spy(x, w, algo, dataflow=Dataflow.NS, p1=128, p2=128, **kw):
+        seen.append((algo, dataflow))
+        return real(x, w, algo, dataflow, p1, p2, **kw)
+
+    monkeypatch.setattr(overlay, "apply_conv", spy)
+    forward(g, params, rnd(56, 56, 3), plan=plan)
+    conv_ids = [nid for nid in g.topo_order()
+                if g.nodes[nid].kind is LayerKind.CONV]
+    assert seen == [(plan.assignment[nid], plan.dataflows[nid])
+                    for nid in conv_ids]
+
+
+def test_fc_chain_is_rank_polymorphic():
+    """FC→FC graphs must batch too: even ranks carry the batch dim."""
+    from repro.cnn.models import _start
+    from repro.core.graph import LayerKind as LK
+    g, cur = _start(8, 4)
+    cur = cur.conv(6, 3, 3, name="c").global_pool().fc(10, name="fc1")
+    cur = cur.fc(5, name="fc2")
+    out = g.add_node(LK.OUTPUT, name="output", out_shape=(1, 1, 5))
+    g.add_edge(cur.node, out)
+    params = init_params(g, jax.random.PRNGKey(3))
+    xb = rnd(3, 8, 8, 4)
+    got = compile_plan(g)(params, xb)
+    assert got.shape == (3, 5)
+    per = jnp.stack([forward(g, params, xb[i]) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(per),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------- serving engine
+def test_cnn_serving_engine_batches(mapped_googlenet):
+    from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
+    g, plan, params = mapped_googlenet
+    eng = CNNServingEngine(g, params, plan, batch_size=2)
+    imgs = [np.asarray(rnd(56, 56, 3)) for _ in range(3)]
+    for rid, img in enumerate(imgs):
+        eng.submit(CNNRequest(rid=rid, image=img))
+    # mismatched requests are rejected at submit (validated against the
+    # graph's input shape), never crashing a tick — even as first submit
+    for bad in (np.zeros((64, 64, 3), np.float32),
+                np.zeros((1, 56, 56, 3), np.float32)):
+        with pytest.raises(ValueError, match="graph input shape"):
+            eng.submit(CNNRequest(rid=99, image=bad))
+    out = eng.run_until_done()
+    assert sorted(out) == [0, 1, 2]       # 3 requests > 2 slots → two ticks
+    for rid, img in enumerate(imgs):
+        want = forward(g, params, jnp.asarray(img), plan=plan)
+        np.testing.assert_allclose(out[rid], np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
