@@ -18,12 +18,14 @@ def main() -> None:
     import benchmarks.bench_algorithms as ba
     import benchmarks.bench_dse as bd
     import benchmarks.bench_e2e as be
+    import benchmarks.bench_fused_autotune as bf
     import benchmarks.bench_roofline as br
     import benchmarks.bench_utilization as bu
 
     results = {}
     for name, mod in (("bench_algorithms", ba), ("bench_utilization", bu),
                       ("bench_dse", bd), ("bench_e2e", be),
+                      ("bench_fused_autotune", bf),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

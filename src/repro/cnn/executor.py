@@ -60,7 +60,8 @@ def init_params(graph: Graph, key: jax.Array,
 
 def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
                 params: Params, x: jax.Array,
-                use_pallas: bool, interpret: Optional[bool]) -> jax.Array:
+                use_pallas: bool, interpret: Optional[bool],
+                avg_pool_via: str = "jnp") -> jax.Array:
     """Walk the graph once; with ``x`` a tracer this IS the trace that
     ``compile_plan`` stages out — all dict lookups and dispatch below happen
     at trace time only."""
@@ -81,8 +82,13 @@ def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
                                    low.dataflow, low.p1, low.p2,
                                    stride=m.stride, padding=pad,
                                    use_pallas=use_pallas,
-                                   interpret=interpret)
-            values[nid] = L.relu(y)
+                                   backend=(None if low.backend == "auto"
+                                            else low.backend),
+                                   interpret=interpret,
+                                   epilogue=low.epilogue)
+            # The graph semantics are CONV→ReLU; a relu-carrying epilogue
+            # already ran it inside the overlay call — ONE call, fused.
+            values[nid] = y if low.epilogue.endswith("relu") else L.relu(y)
         elif node.kind is LayerKind.POOL_MAX:
             pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
             values[nid] = L.max_pool(ins[0], int(node.attrs["k"]),
@@ -90,7 +96,10 @@ def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
         elif node.kind is LayerKind.POOL_AVG:
             pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
             values[nid] = L.avg_pool(ins[0], int(node.attrs["k"]),
-                                     int(node.attrs["stride"]), pad)
+                                     int(node.attrs["stride"]), pad,
+                                     via=avg_pool_via,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
         elif node.kind is LayerKind.CONCAT:
             values[nid] = jnp.concatenate(ins, axis=-1)
         elif node.kind is LayerKind.ADD:
@@ -116,18 +125,24 @@ def forward(graph: Graph, params: Params,
             x: jax.Array, plan: Optional[ExecutionPlan] = None,
             default_algo: Algorithm = IM2COL,
             use_pallas: bool = False,
-            interpret: Optional[bool] = None) -> jax.Array:
+            interpret: Optional[bool] = None,
+            epilogue: str = "relu",
+            tuning=None) -> jax.Array:
     """Eager inference. ``x``: (H, W, C) single image (the paper's no-batch
     low-latency setting) or (B, H, W, C) batch. Each call re-interprets the
     plan in Python — use ``compile_plan`` for the dispatch-free hot path."""
-    lowering = lower_plan(graph, plan, default_algo)
+    lowering = lower_plan(graph, plan, default_algo,
+                          epilogue=epilogue, tuning=tuning)
     return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
 
 
 def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  default_algo: Algorithm = IM2COL,
                  use_pallas: bool = False,
-                 interpret: Optional[bool] = None
+                 interpret: Optional[bool] = None,
+                 epilogue: str = "relu",
+                 tuning=None,
+                 avg_pool_via: str = "jnp"
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
@@ -140,11 +155,22 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     ROADMAP.) One compilation is cached per input shape/dtype (batch sizes
     compile once each — pad to a fixed batch to avoid recompilation, as
     ``CNNServingEngine`` does).
+
+    ``epilogue="relu"`` (the default) fuses each CONV's trailing ReLU into
+    its overlay call; ``epilogue="none"`` reproduces the PR-1 unfused
+    conv-then-relu lowering (kept for benchmarking). A ``tuning`` record
+    from ``core.autotune`` replaces cost-model bindings with measured
+    winners, including per-layer pallas/reference backend selection inside
+    this single compiled program. ``avg_pool_via="overlay"`` routes AvgPool
+    layers through the overlay's GEMM unit (§3.4) instead of the jnp
+    reduce-window.
     """
-    lowering = lower_plan(graph, plan, default_algo)
+    lowering = lower_plan(graph, plan, default_algo,
+                          epilogue=epilogue, tuning=tuning)
 
     @jax.jit
     def run(params: Params, x: jax.Array) -> jax.Array:
-        return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
+        return _eval_graph(graph, lowering, params, x, use_pallas, interpret,
+                           avg_pool_via)
 
     return run

@@ -33,14 +33,51 @@ def max_pool(x: jax.Array, k: int, stride: int,
 
 
 def avg_pool(x: jax.Array, k: int, stride: int,
-             padding: str = "SAME") -> jax.Array:
-    """§3.4: AvgPool expressed as a K×K conv with 1/(K1·K2) weights —
-    we keep that formulation so it can route through the GEMM unit."""
+             padding: str = "SAME", *, via: str = "jnp",
+             use_pallas: bool = False,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """§3.4: AvgPool expressed as a K×K conv with 1/(K1·K2) weights so it
+    can route through the overlay's GEMM unit.
+
+    ``via="overlay"`` runs that formulation literally — a K×K conv with the
+    channel-diagonal 1/(K1K2) weight streamed through ``overlay.apply_conv``
+    (Pallas or reference backend, like any conv layer); ``via="jnp"`` is the
+    reduce-window fallback. Both divide by the number of *valid* (unpadded)
+    window elements, so the two paths are numerically equivalent.
+    """
+    if via == "overlay":
+        return _avg_pool_overlay(x, k, stride, padding, use_pallas, interpret)
+    if via != "jnp":
+        raise ValueError(f"unknown avg_pool via {via!r}")
     win, strides = _window(x, k, stride)
     s = jax.lax.reduce_window(x, 0.0, jax.lax.add, win, strides, padding)
     n = jax.lax.reduce_window(jnp.ones_like(x), 0.0, jax.lax.add, win,
                               strides, padding)
     return s / n
+
+
+def _avg_pool_overlay(x: jax.Array, k: int, stride: int, padding: str,
+                      use_pallas: bool, interpret: Optional[bool]
+                      ) -> jax.Array:
+    """AvgPool on the Computing Unit: K×K conv, weight (ci==co)/(K·K).
+
+    With SAME padding the GEMM sums zero-padded windows (÷K² everywhere),
+    while pooling semantics divide by the valid-element count — rescale by
+    K²/n so edges match the jnp path exactly.
+    """
+    from repro.cnn import overlay              # deferred: executor-level dep
+    from repro.core.algorithms import IM2COL
+    c = x.shape[-1]
+    w = jnp.broadcast_to(jnp.eye(c, dtype=x.dtype) / (k * k),
+                         (k, k, c, c))
+    y = overlay.apply_conv(x, w, IM2COL, stride=stride, padding=padding,
+                           use_pallas=use_pallas, interpret=interpret)
+    if padding == "SAME":
+        win, strides = _window(x, k, stride)
+        n = jax.lax.reduce_window(jnp.ones_like(x), 0.0, jax.lax.add, win,
+                                  strides, padding)
+        y = y * (k * k) / n
+    return y
 
 
 def global_avg_pool(x: jax.Array) -> jax.Array:

@@ -24,8 +24,9 @@ import jax
 
 from repro.core.algorithms import Algorithm, AlgoFamily
 from repro.core.cost_model import Dataflow
+from repro.kernels.common import apply_epilogue
 from repro.kernels.conv_im2col.ops import conv_im2col
-from repro.kernels.conv_im2col.ref import conv_via_toeplitz_ref
+from repro.kernels.conv_im2col.ref import conv_ref, conv_via_toeplitz_ref
 from repro.kernels.kn2row.ops import conv_kn2row
 from repro.kernels.kn2row.ref import kn2row_ref
 from repro.kernels.winograd.ops import conv_winograd
@@ -37,37 +38,69 @@ def apply_conv(x: jax.Array, w: jax.Array, algo: Algorithm,
                p1: int = 128, p2: int = 128, *,
                stride: int = 1, padding: str = "SAME",
                use_pallas: bool = False,
-               interpret: Optional[bool] = None) -> jax.Array:
+               backend: Optional[str] = None,
+               interpret: Optional[bool] = None,
+               epilogue: str = "none",
+               bias: Optional[jax.Array] = None) -> jax.Array:
     """Run one conv layer on the overlay under a plan binding.
 
     x: (H, W, Cin) or (B, H, W, Cin); w: (K1, K2, Cin, Cout).
     ``dataflow``/(p1, p2) select the Eq. 9 GEMM block binding — they only
     shape the Pallas execution schedule, never the math, so any binding
     produces identical outputs (the §3 invariant the tests assert).
+
+    ``backend`` (when given) overrides ``use_pallas``: "pallas" runs the
+    Pallas kernels, "reference" the per-algorithm jnp oracles, and "lax"
+    XLA's native spatial convolution — the "tiny convs via jnp" leg of a
+    mixed-backend plan, and the strongest conv this host's XLA can emit
+    (the autotuner measures it against the overlay algorithms per layer).
+
+    ``epilogue`` ("none" | "relu" | "bias" | "bias_relu") streams the conv
+    output through the §3 in-pipeline auxiliary units: on the Pallas path it
+    fuses into the kernel's output flush (no DRAM round trip); the jnp
+    reference/lax paths apply it post-hoc (XLA fuses it there) so every
+    backend computes the same function — CONV+ReLU is ONE overlay call
+    either way.
     """
+    if backend is not None:
+        if backend == "lax":
+            return apply_epilogue(
+                conv_ref(x, w, stride=stride, padding=padding),
+                epilogue, bias)
+        if backend not in ("pallas", "reference"):
+            raise ValueError(f"unknown backend {backend!r}")
+        use_pallas = backend == "pallas"
     fam = algo.family
     if fam is AlgoFamily.IM2COL:
         if use_pallas:
             return conv_im2col(x, w, stride=stride, padding=padding,
                                dataflow=dataflow, p1=p1, p2=p2,
-                               interpret=interpret)
-        return conv_via_toeplitz_ref(x, w, stride=stride, padding=padding)
+                               interpret=interpret,
+                               epilogue=epilogue, bias=bias)
+        return apply_epilogue(
+            conv_via_toeplitz_ref(x, w, stride=stride, padding=padding),
+            epilogue, bias)
     if fam is AlgoFamily.KN2ROW:
         if use_pallas:
             return conv_kn2row(x, w, stride=stride, padding=padding,
                                dataflow=dataflow, p1=p1, p2=p2,
-                               interpret=interpret)
-        return kn2row_ref(x, w, stride=stride, padding=padding)
+                               interpret=interpret,
+                               epilogue=epilogue, bias=bias)
+        return apply_epilogue(
+            kn2row_ref(x, w, stride=stride, padding=padding), epilogue, bias)
     # Winograd — stride-1 square kernels only (menu_for guarantees this);
     # non-square/strided layers never receive a Winograd assignment.
     assert stride == 1 and w.shape[0] == w.shape[1]
     if use_pallas:
         return conv_winograd(x, w, m=algo.m, padding=padding,
                              dataflow=dataflow, p1=p1, p2=p2,
-                             interpret=interpret)
+                             interpret=interpret,
+                             epilogue=epilogue, bias=bias)
     if w.shape[0] == 3:
-        return winograd_ref(x, w, m=algo.m, padding=padding)
+        return apply_epilogue(winograd_ref(x, w, m=algo.m, padding=padding),
+                              epilogue, bias)
     # K>r multi-round path has no standalone jnp ref; fall back to the
     # Pallas implementation in interpret mode (still winograd math).
     return conv_winograd(x, w, m=algo.m, padding=padding,
-                         dataflow=dataflow, p1=p1, p2=p2, interpret=True)
+                         dataflow=dataflow, p1=p1, p2=p2, interpret=True,
+                         epilogue=epilogue, bias=bias)

@@ -12,8 +12,12 @@ from repro.core.dse import (HardwareChoice, candidate_shapes,
                             identify_parameters, vmem_working_set)
 from repro.core.graph import (ConvMeta, Graph, LayerKind, LayerNode,
                               is_series_parallel)
-from repro.core.mapper import (CostGraphBuilder, ExecutionPlan,
-                               evaluate_fixed_mapping, map_network)
+from repro.core.autotune import (Binding, LayerTuning, TuningRecord,
+                                 autotune_graph, benchmark_binding,
+                                 candidate_bindings, conv_key, tune_layer)
+from repro.core.mapper import (ConvLowering, CostGraphBuilder,
+                               ExecutionPlan, evaluate_fixed_mapping,
+                               lower_plan, map_network)
 from repro.core.pbqp import (PBQP, SolveResult, solve_brute_force,
                              solve_greedy_incremental, solve_greedy_node,
                              solve_series_parallel)

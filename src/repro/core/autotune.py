@@ -1,0 +1,335 @@
+"""Measured per-layer autotuning of overlay bindings (block autotuning
+beyond the DSE's (p1, p2) sweep).
+
+DYNAMAP's DSE picks each layer's algorithm, dataflow and (p1, p2) block
+binding from the *analytical* cost model (Eq. 9/13). That model ranks
+bindings for the paper's target hardware; on the machine actually serving
+traffic the ranking can differ (interpreter overheads, cache behavior, XLA
+fusion). This module closes the loop: for every conv layer it benchmarks
+candidate ``(algorithm, dataflow, p1, p2, backend)`` bindings **on the
+device**, caches the winners in a JSON tuning record keyed by the layer's
+conv signature, and ``core.mapper.lower_plan`` consumes that record to
+override the cost-model binding per layer — including mixing jnp-reference
+and Pallas backends inside one compiled plan.
+
+Typical use::
+
+    plan = map_network(graph)                     # model-predicted plan
+    record = autotune_graph(graph, plan)          # measure on this device
+    record.save("tuning.json")
+    run = compile_plan(graph, plan, tuning=record)  # measured bindings
+
+Records are shape-keyed, so one record transfers between graphs that share
+conv signatures, and re-tuning is incremental (``skip_known``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import Algorithm, AlgoFamily, menu_for
+from repro.core.cost_model import ALL_DATAFLOWS, Dataflow
+from repro.core.graph import ConvMeta, Graph
+from repro.core.mapper import ConvLowering, ExecutionPlan
+
+# "lax" = XLA's native spatial conv — algorithm-independent, so it
+# contributes one candidate per layer; it is the strongest conv the host
+# XLA can emit and routinely wins on CPU (on TPU the Pallas sweeps fight
+# back — that's the point of measuring).
+BACKENDS = ("lax", "reference", "pallas")
+
+RECORD_VERSION = 1
+
+
+def conv_key(conv: ConvMeta) -> str:
+    """Shape signature identifying a conv layer for tuning purposes: two
+    layers with the same signature induce identical GEMMs, so they share a
+    measured winner."""
+    return (f"c{conv.c_in}x{conv.c_out}_h{conv.h1}x{conv.h2}"
+            f"_k{conv.k1}x{conv.k2}_s{conv.stride}_{conv.pad}")
+
+
+def algo_from_key(key: str) -> Algorithm:
+    """Inverse of ``Algorithm.key`` ("im2col", "winograd(F2x3)", ...)."""
+    for fam in AlgoFamily:
+        if key == fam.value:
+            return Algorithm(fam)
+    if key.startswith("winograd(F"):
+        m, r = key[len("winograd(F"):-1].split("x")
+        return Algorithm(AlgoFamily.WINOGRAD, m=int(m), r=int(r))
+    raise ValueError(f"unparseable algorithm key {key!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Binding:
+    """One candidate configuration of the overlay for a layer."""
+    algo_key: str
+    dataflow: str                  # Dataflow name: NS | WS | IS
+    p1: int
+    p2: int
+    backend: str                   # reference | pallas
+
+    @property
+    def algo(self) -> Algorithm:
+        return algo_from_key(self.algo_key)
+
+    def label(self) -> str:
+        return (f"{self.algo_key}|{self.dataflow}|{self.p1}x{self.p2}"
+                f"|{self.backend}")
+
+
+@dataclasses.dataclass
+class LayerTuning:
+    """Measured winner for one conv signature."""
+    binding: Binding
+    measured_s: float
+    # (label, seconds) for every candidate tried — kept for analysis.
+    candidates: List[Tuple[str, float]]
+
+
+class TuningRecord:
+    """Conv-signature → measured best binding, JSON round-trippable."""
+
+    def __init__(self, entries: Optional[Dict[str, LayerTuning]] = None,
+                 meta: Optional[Dict[str, object]] = None) -> None:
+        self.entries: Dict[str, LayerTuning] = dict(entries or {})
+        self.meta: Dict[str, object] = dict(meta or {})
+
+    # ------------------------------------------------------------ lookup
+    def lookup(self, conv: ConvMeta) -> Optional[LayerTuning]:
+        return self.entries.get(conv_key(conv))
+
+    def lowering_for(self, conv: ConvMeta) -> Optional[ConvLowering]:
+        """The measured binding as a ConvLowering fragment (epilogue is the
+        caller's concern — tuning only overrides the execution binding)."""
+        hit = self.lookup(conv)
+        if hit is None:
+            return None
+        b = hit.binding
+        return ConvLowering(b.algo, Dataflow[b.dataflow], b.p1, b.p2,
+                            backend=b.backend)
+
+    # ------------------------------------------------------------ persist
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "version": RECORD_VERSION,
+            "meta": self.meta,
+            "entries": {
+                key: {
+                    "binding": dataclasses.asdict(t.binding),
+                    "measured_s": t.measured_s,
+                    "candidates": [[lbl, s] for lbl, s in t.candidates],
+                }
+                for key, t in self.entries.items()
+            },
+        }
+
+    @classmethod
+    def from_json(cls, blob: Dict[str, object]) -> "TuningRecord":
+        if blob.get("version") != RECORD_VERSION:
+            raise ValueError(f"tuning record version {blob.get('version')} "
+                             f"!= {RECORD_VERSION}")
+        entries = {}
+        for key, ent in blob.get("entries", {}).items():   # type: ignore
+            entries[key] = LayerTuning(
+                binding=Binding(**ent["binding"]),
+                measured_s=float(ent["measured_s"]),
+                candidates=[(lbl, float(s)) for lbl, s in ent["candidates"]],
+            )
+        return cls(entries, blob.get("meta", {}))          # type: ignore
+
+    def save(self, path) -> None:
+        Path(path).write_text(json.dumps(self.to_json(), indent=2))
+
+    @classmethod
+    def load(cls, path) -> "TuningRecord":
+        return cls.from_json(json.loads(Path(path).read_text()))
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation.
+# ---------------------------------------------------------------------------
+
+def candidate_bindings(conv: ConvMeta,
+                       p1p2: Sequence[Tuple[int, int]] = ((128, 128),),
+                       dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+                       backends: Sequence[str] = BACKENDS,
+                       menu: Optional[Sequence[Algorithm]] = None
+                       ) -> List[Binding]:
+    """The search space for one layer.
+
+    The reference backend ignores dataflow/(p1, p2) — the binding only
+    shapes the Pallas schedule — so it contributes one candidate per
+    applicable algorithm; the Pallas backend sweeps the full cross product;
+    the lax backend ignores the algorithm too (XLA picks its own conv
+    strategy) and contributes exactly one candidate.
+    """
+    algos = menu_for(conv, list(menu) if menu is not None else None)
+    out: List[Binding] = []
+    if "lax" in backends:
+        out.append(Binding(algos[0].key, Dataflow.NS.name, 128, 128, "lax"))
+    for algo in algos:
+        if "reference" in backends:
+            out.append(Binding(algo.key, Dataflow.NS.name, 128, 128,
+                               "reference"))
+        if "pallas" in backends:
+            for df in dataflows:
+                for (p1, p2) in p1p2:
+                    out.append(Binding(algo.key, df.name, p1, p2, "pallas"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Measurement.
+# ---------------------------------------------------------------------------
+
+def benchmark_binding(conv: ConvMeta, binding: Binding, *,
+                      reps: int = 3, warmup: int = 1,
+                      interpret: Optional[bool] = None,
+                      batch: Optional[int] = None,
+                      seed: int = 0) -> float:
+    """Wall-clock one overlay call for ``conv`` under ``binding`` on the
+    actual device; returns the best (min) of ``reps`` timed runs — min is
+    the standard noise-robust estimator for microbenchmarks.
+
+    The call is jitted whole, exactly as it appears inside a compiled plan,
+    so reference and Pallas backends are timed on equal footing. ``batch``
+    measures the batched overlay path (B, H, W, C) — bindings do not rank
+    identically at batch 1 and batch 8, so tune at the batch you serve.
+    """
+    from repro.cnn import overlay       # deferred: overlay imports kernels
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    shape = (conv.h1, conv.h2, conv.c_in)
+    if batch is not None:
+        shape = (batch,) + shape
+    x = jax.random.normal(kx, shape, jnp.float32)
+    w = jax.random.normal(kw, (conv.k1, conv.k2, conv.c_in, conv.c_out),
+                          jnp.float32) / (conv.k1 * conv.k2 * conv.c_in) ** .5
+    pad = "SAME" if conv.pad == "same" else "VALID"
+
+    @jax.jit
+    def run(x, w):
+        return overlay.apply_conv(
+            x, w, binding.algo, Dataflow[binding.dataflow],
+            binding.p1, binding.p2, stride=conv.stride, padding=pad,
+            backend=binding.backend, interpret=interpret,
+            epilogue="relu")
+
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(run(x, w))    # compile + warm caches
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(x, w))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tune_layer(conv: ConvMeta, *,
+               p1p2: Sequence[Tuple[int, int]] = ((128, 128),),
+               dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+               backends: Sequence[str] = BACKENDS,
+               menu: Optional[Sequence[Algorithm]] = None,
+               reps: int = 3, interpret: Optional[bool] = None,
+               batch: Optional[int] = None,
+               baseline: Optional[Binding] = None,
+               min_improvement: float = 0.05) -> LayerTuning:
+    """Benchmark every candidate binding for one conv; return the winner.
+
+    With a ``baseline`` (the plan's own binding), a challenger must beat it
+    by more than ``min_improvement`` (fractional) or the baseline is kept:
+    at μs layer scales dispatch jitter can crown a spurious winner, and the
+    hysteresis guarantees a tuned plan never regresses below the
+    model-predicted binding by chasing noise.
+    """
+    results: List[Tuple[str, float]] = []
+    base_s: Optional[float] = None
+    if baseline is not None:
+        base_s = benchmark_binding(conv, baseline, reps=reps,
+                                   interpret=interpret, batch=batch)
+        results.append((baseline.label(), base_s))
+    best: Optional[Tuple[Binding, float]] = None
+    for cand in candidate_bindings(conv, p1p2, dataflows, backends, menu):
+        if baseline is not None and cand == baseline:
+            continue
+        s = benchmark_binding(conv, cand, reps=reps, interpret=interpret,
+                              batch=batch)
+        results.append((cand.label(), s))
+        if best is None or s < best[1]:
+            best = (cand, s)
+    if best is None or (base_s is not None
+                        and best[1] >= base_s * (1 - min_improvement)):
+        assert baseline is not None and base_s is not None
+        best = (baseline, base_s)
+    return LayerTuning(binding=best[0], measured_s=best[1],
+                       candidates=results)
+
+
+def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
+                   p1p2: Optional[Sequence[Tuple[int, int]]] = None,
+                   dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+                   backends: Sequence[str] = BACKENDS,
+                   menu: Optional[Sequence[Algorithm]] = None,
+                   reps: int = 3, interpret: Optional[bool] = None,
+                   batch: Optional[int] = None,
+                   record: Optional[TuningRecord] = None,
+                   skip_known: bool = True,
+                   baseline_backend: str = "reference",
+                   min_improvement: float = 0.05,
+                   verbose: bool = False) -> TuningRecord:
+    """Measure every *unique* conv signature in ``graph`` and record the
+    fastest binding for each.
+
+    ``plan`` (if given) plays two roles: it seeds the (p1, p2) candidate
+    list with the DSE's Eq. 9 choice, and its per-layer binding (under
+    ``baseline_backend``) becomes the hysteresis baseline a challenger must
+    beat by ``min_improvement`` — so a tuned plan can only diverge from the
+    model's prediction where the device measurably disagrees. Passing an
+    existing ``record`` makes tuning incremental: signatures already
+    recorded are skipped (``skip_known=True``).
+    """
+    if p1p2 is None:
+        p1p2 = [(128, 128)]
+        if plan is not None and (plan.p1, plan.p2) not in p1p2:
+            p1p2.append((plan.p1, plan.p2))
+    record = record if record is not None else TuningRecord()
+    record.meta.setdefault("backend", jax.default_backend())
+    record.meta.setdefault("reps", reps)
+    record.meta.setdefault("min_improvement", min_improvement)
+    record.meta.setdefault("batch", batch)
+
+    seen: Dict[str, Tuple[ConvMeta, Optional[Binding]]] = {}
+    for node in graph.conv_nodes():
+        key = conv_key(node.conv)
+        if key in seen:
+            continue
+        baseline = None
+        if plan is not None and node.id in plan.assignment:
+            baseline = Binding(plan.assignment[node.id].key,
+                               plan.dataflows[node.id].name,
+                               plan.p1, plan.p2, baseline_backend)
+        seen[key] = (node.conv, baseline)
+
+    for key, (conv, baseline) in seen.items():
+        if skip_known and key in record.entries:
+            continue
+        t0 = time.perf_counter()
+        tuned = tune_layer(conv, p1p2=p1p2, dataflows=dataflows,
+                           backends=backends, menu=menu, reps=reps,
+                           interpret=interpret, batch=batch,
+                           baseline=baseline,
+                           min_improvement=min_improvement)
+        record.entries[key] = tuned
+        if verbose:
+            print(f"autotune {key}: {tuned.binding.label()} "
+                  f"{tuned.measured_s * 1e6:.0f}us "
+                  f"({len(tuned.candidates)} candidates, "
+                  f"{time.perf_counter() - t0:.1f}s)")
+    return record

@@ -18,9 +18,12 @@ Both formulations price exactly the same store/load legs of Table 2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover — autotune imports mapper at runtime
+    from repro.core.autotune import TuningRecord
 
 from repro.core.algorithms import (Algorithm, AlgoFamily, DEFAULT_MENU,
                                    IM2COL, KN2ROW, Layout, menu_for)
@@ -64,30 +67,55 @@ class ExecutionPlan:
 class ConvLowering:
     """Static per-conv-layer binding the compiled overlay closes over:
     everything the Computing Unit needs to execute one layer — algorithm
-    wrapper plus the Eq. 9 dataflow/(p1, p2) GEMM block binding. Hashable,
-    so a (graph, lowering) pair keys one jit-compiled program."""
+    wrapper, the Eq. 9 dataflow/(p1, p2) GEMM block binding, the fused
+    post-GEMM ``epilogue`` ("none"|"relu"|"bias"|"bias_relu") and the
+    ``backend`` the layer runs on ("auto" follows the executor-wide
+    use_pallas flag; "pallas"/"reference"/"lax" pin it, letting one
+    compiled plan mix tiny-conv jnp/lax layers with big Pallas GEMMs).
+    Hashable, so a (graph, lowering) pair keys one jit-compiled program."""
     algo: Algorithm
     dataflow: Dataflow
     p1: int
     p2: int
+    epilogue: str = "relu"
+    backend: str = "auto"
 
 
 def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
-               default_algo: Algorithm = IM2COL) -> Dict[int, ConvLowering]:
+               default_algo: Algorithm = IM2COL, *,
+               epilogue: str = "relu",
+               backend: str = "auto",
+               tuning: Optional["TuningRecord"] = None
+               ) -> Dict[int, ConvLowering]:
     """Lower an ExecutionPlan to the static spec consumed at trace time.
 
     With ``plan=None`` every conv gets ``default_algo`` under the NS
     dataflow on a 128×128 virtual array (the paper's unconfigured overlay).
+
+    ``epilogue``/``backend`` seed every layer's lowering; a ``tuning``
+    record (``core.autotune``) overrides the cost-model binding — algorithm,
+    dataflow, (p1, p2) blocks and backend — per layer with the *measured*
+    winner, keyed by the layer's conv signature. Layers without a record
+    entry keep the model-predicted binding.
     """
     out: Dict[int, ConvLowering] = {}
-    for nid in (n.id for n in graph.conv_nodes()):
+    for node in graph.conv_nodes():
+        nid = node.id
         if plan is None:
-            out[nid] = ConvLowering(default_algo, Dataflow.NS, 128, 128)
+            low = ConvLowering(default_algo, Dataflow.NS, 128, 128,
+                               epilogue, backend)
         else:
-            out[nid] = ConvLowering(
+            low = ConvLowering(
                 plan.assignment.get(nid, default_algo),
                 plan.dataflows.get(nid, Dataflow.NS),
-                plan.p1, plan.p2)
+                plan.p1, plan.p2, epilogue, backend)
+        if tuning is not None:
+            tuned = tuning.lowering_for(node.conv)
+            if tuned is not None:
+                low = dataclasses.replace(
+                    low, algo=tuned.algo, dataflow=tuned.dataflow,
+                    p1=tuned.p1, p2=tuned.p2, backend=tuned.backend)
+        out[nid] = low
     return out
 
 

@@ -9,6 +9,35 @@ import jax
 import jax.numpy as jnp
 
 
+# Post-GEMM epilogues the Computing Unit can fuse into a kernel's output
+# flush (§3's in-pipeline auxiliary units: the conv output streams through
+# ReLU/bias without a DRAM round trip). "none" is the identity.
+EPILOGUES = ("none", "relu", "bias", "bias_relu")
+
+
+def apply_epilogue(y: jax.Array, epilogue: str,
+                   bias: jax.Array = None) -> jax.Array:
+    """Apply a named epilogue; ``bias`` broadcasts over the minor dim."""
+    if epilogue not in EPILOGUES:
+        raise ValueError(f"unknown epilogue {epilogue!r}; want {EPILOGUES}")
+    if epilogue.startswith("bias"):
+        if bias is None:
+            raise ValueError(f"epilogue {epilogue!r} needs a bias array")
+        y = y + bias.astype(y.dtype)
+    if epilogue.endswith("relu"):
+        y = jnp.maximum(y, 0)
+    return y
+
+
+def pad_bias(bias, n: int, n_padded: int):
+    """Prep a fused-epilogue bias for a Pallas kernel: (N,) → (1, N_padded),
+    zero-padded channels (they are sliced away with the padded output)."""
+    if bias is None:
+        return None
+    assert bias.shape == (n,), (bias.shape, n)
+    return jnp.pad(bias, (0, n_padded - n)).reshape(1, n_padded)
+
+
 def ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 

@@ -20,10 +20,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import apply_epilogue
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, k1: int, k2: int, stride: int,
-                 bo1: int, o2: int, c_in: int):
+
+def _conv_kernel(x_ref, w_ref, *rest, k1: int, k2: int, stride: int,
+                 bo1: int, o2: int, c_in: int, epilogue: str):
     """One grid step = (one block of output rows) × (one block of C_out)."""
+    if len(rest) == 2:            # fused bias operand present
+        bias_ref, o_ref = rest
+    else:
+        (o_ref,), bias_ref = rest, None
     i = pl.program_id(0)
     x = x_ref[...]                                   # (Hp, Wp, Cin) in VMEM
     row0 = i * bo1 * stride
@@ -38,26 +44,37 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, k1: int, k2: int, stride: int,
     # The Toeplitz tile — VMEM-only (this is the whole point).
     toep = jnp.stack(patches, axis=2).reshape(bo1 * o2, k1 * k2 * c_in)
     acc = jnp.dot(toep, w_ref[...], preferred_element_type=jnp.float32)
+    # Epilogue on the GEMM output block while it is still VMEM-resident —
+    # the §3 in-pipeline auxiliary unit.
+    acc = apply_epilogue(acc, epilogue,
+                         bias_ref[0] if bias_ref is not None else None)
     o_ref[...] = acc.reshape(bo1, o2, -1).astype(o_ref.dtype)
 
 
 def conv_im2col_call(x: jax.Array, w: jax.Array, *, k1: int, k2: int,
                      stride: int, o1: int, o2: int, bo1: int, bc: int,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool = True, epilogue: str = "none",
+                     bias: jax.Array = None) -> jax.Array:
     hp, wp, c_in = x.shape
     kkc, c_out = w.shape
     assert kkc == k1 * k2 * c_in, (kkc, k1, k2, c_in)
     assert c_out % bc == 0 and o1 % bo1 == 0
     grid = (o1 // bo1, c_out // bc)
+    in_specs = [
+        pl.BlockSpec((hp, wp, c_in), lambda i, j: (0, 0, 0)),
+        pl.BlockSpec((kkc, bc), lambda i, j: (0, j)),
+    ]
+    operands = [x, w]
+    if bias is not None:
+        assert bias.shape == (1, c_out), (bias.shape, c_out)
+        in_specs.append(pl.BlockSpec((1, bc), lambda i, j: (0, j)))
+        operands.append(bias)
     return pl.pallas_call(
         functools.partial(_conv_kernel, k1=k1, k2=k2, stride=stride,
-                          bo1=bo1, o2=o2, c_in=c_in),
+                          bo1=bo1, o2=o2, c_in=c_in, epilogue=epilogue),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((hp, wp, c_in), lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((kkc, bc), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bo1, o2, bc), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((o1, o2, c_out), x.dtype),
         interpret=interpret,
-    )(x, w)
+    )(*operands)

@@ -17,21 +17,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import Dataflow
-from repro.kernels.common import batchable, ceil_to, default_interpret
+from repro.kernels.common import (batchable, ceil_to, default_interpret,
+                                  pad_bias)
 from repro.kernels.conv_im2col.conv_im2col import conv_im2col_call
 from repro.kernels.gemm.ops import dataflow_blocks
 
 
 @batchable
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "dataflow", "p1", "p2", "interpret"))
+    "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue"))
 def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: str = "SAME",
                 dataflow: Dataflow = Dataflow.NS,
                 p1: int = 128, p2: int = 128,
-                interpret: Optional[bool] = None) -> jax.Array:
+                interpret: Optional[bool] = None,
+                epilogue: str = "none",
+                bias: Optional[jax.Array] = None) -> jax.Array:
     """Convolution via the im2col algorithm. x: (H, W, Cin) or (B, H, W, Cin),
-    w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout)."""
+    w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout). ``epilogue`` fuses the
+    post-GEMM auxiliary unit (ReLU / bias) into the kernel's output flush."""
     interpret = default_interpret() if interpret is None else interpret
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
@@ -60,5 +64,6 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
     wm = jnp.pad(wm, ((0, 0), (0, c_outp - c_out)))
     out = conv_im2col_call(xp, wm, k1=k1, k2=k2, stride=stride,
                            o1=o1p, o2=o2, bo1=bo1, bc=bc,
-                           interpret=interpret)
+                           interpret=interpret, epilogue=epilogue,
+                           bias=pad_bias(bias, c_out, c_outp))
     return out[:o1, :, :c_out]

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import apply_epilogue
+
 try:  # TPU memory spaces; interpret mode works without a TPU present.
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
@@ -33,7 +35,11 @@ except Exception:  # pragma: no cover
     _VMEM = None
 
 
-def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+def _gemm_kernel(a_ref, b_ref, *rest, nk: int, epilogue: str):
+    if len(rest) == 3:            # fused bias: (bias_ref, o_ref, acc_ref)
+        bias_ref, o_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), bias_ref = rest, None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -45,15 +51,21 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
 
     @pl.when(k == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = apply_epilogue(acc_ref[...], epilogue,
+                             bias_ref[0] if bias_ref is not None else None)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
-                interpret: bool = True,
-                out_dtype=None) -> jax.Array:
-    """C = A @ B with explicit (bm, bn, bk) VMEM tiling.
+                interpret: bool = True, out_dtype=None,
+                epilogue: str = "none",
+                bias: jax.Array = None) -> jax.Array:
+    """C = epilogue(A @ B [+ bias]) with explicit (bm, bn, bk) VMEM tiling.
 
-    Caller must pre-pad so M % bm == N % bn == K % bk == 0 (ops.py does).
+    The epilogue is applied in-kernel at the accumulator flush — the output
+    block streams through the auxiliary unit (§3) before ever leaving VMEM.
+    Caller must pre-pad so M % bm == N % bn == K % bk == 0 (ops.py does);
+    ``bias`` (if given) must be pre-padded to (1, N).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -66,25 +78,34 @@ def gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
     grid = (m // bm, n // bn, nk)
     scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
                else pl.ANY)  # pragma: no cover
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [a, b]
+    if bias is not None:
+        assert bias.shape == (1, n), (bias.shape, n)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(bias)
     return pl.pallas_call(
-        functools.partial(_gemm_kernel, nk=nk),
+        functools.partial(_gemm_kernel, nk=nk, epilogue=epilogue),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[scratch],
         interpret=interpret,
-    )(a, b)
+    )(*operands)
 
 
 def batched_gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int,
-                        bk: int, interpret: bool = True,
-                        out_dtype=None) -> jax.Array:
-    """C[g] = A[g] @ B[g] — used for the (m+r-1)^2 independent Winograd GEMMs
-    (Eq. 6): the transform-space Hadamard products batched over tile position."""
+                        bk: int, interpret: bool = True, out_dtype=None,
+                        epilogue: str = "none",
+                        bias: jax.Array = None) -> jax.Array:
+    """C[g] = epilogue(A[g] @ B[g] [+ bias]) — used for the (m+r-1)^2
+    independent Winograd GEMMs (Eq. 6): the transform-space Hadamard products
+    batched over tile position. ``bias`` (if given) is (1, N), shared across
+    the batch dim."""
     g, m, k = a.shape
     g2, k2, n = b.shape
     assert g == g2 and k == k2
@@ -92,7 +113,11 @@ def batched_gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int,
     nk = k // bk
     out_dtype = out_dtype or a.dtype
 
-    def kernel(a_ref, b_ref, o_ref, acc_ref):
+    def kernel(a_ref, b_ref, *rest):
+        if len(rest) == 3:
+            bias_ref, o_ref, acc_ref = rest
+        else:
+            (o_ref, acc_ref), bias_ref = rest, None
         kk = pl.program_id(3)
 
         @pl.when(kk == 0)
@@ -104,19 +129,27 @@ def batched_gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int,
 
         @pl.when(kk == nk - 1)
         def _flush():
-            o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+            acc = apply_epilogue(acc_ref[...], epilogue,
+                                 bias_ref[0] if bias_ref is not None else None)
+            o_ref[0] = acc.astype(o_ref.dtype)
 
     scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
                else pl.ANY)  # pragma: no cover
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+        pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+    ]
+    operands = [a, b]
+    if bias is not None:
+        assert bias.shape == (1, n), (bias.shape, n)
+        in_specs.append(pl.BlockSpec((1, bn), lambda gg, i, j, kk: (0, j)))
+        operands.append(bias)
     return pl.pallas_call(
         kernel,
         grid=(g, m // bm, n // bn, nk),
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
-            pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
         scratch_shapes=[scratch],
         interpret=interpret,
-    )(a, b)
+    )(*operands)

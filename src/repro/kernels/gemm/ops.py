@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import Dataflow
-from repro.kernels.common import ceil_to, default_interpret, pad_to
+from repro.kernels.common import ceil_to, default_interpret, pad_bias, pad_to
 from repro.kernels.gemm.gemm import batched_gemm_pallas, gemm_pallas
 
 _STREAM_TILE = 128   # native MXU granularity on the streamed dim
@@ -31,13 +31,15 @@ def dataflow_blocks(dataflow: Dataflow, p1: int, p2: int
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "dataflow", "p1", "p2", "interpret", "out_dtype"))
+    "dataflow", "p1", "p2", "interpret", "out_dtype", "epilogue"))
 def gemm(a: jax.Array, b: jax.Array,
          dataflow: Dataflow = Dataflow.NS,
          p1: int = 128, p2: int = 128,
          interpret: Optional[bool] = None,
-         out_dtype=None) -> jax.Array:
-    """C = A @ B on the dataflow-switchable Computing Unit."""
+         out_dtype=None, epilogue: str = "none",
+         bias: Optional[jax.Array] = None) -> jax.Array:
+    """C = epilogue(A @ B [+ bias]) on the dataflow-switchable Computing
+    Unit; the epilogue is fused into the kernel's output flush."""
     interpret = default_interpret() if interpret is None else interpret
     m, k = a.shape
     _, n = b.shape
@@ -47,17 +49,19 @@ def gemm(a: jax.Array, b: jax.Array,
     ap = pad_to(a, (bm, bk))
     bp = pad_to(b, (bk, bn))
     out = gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret,
-                      out_dtype=out_dtype)
+                      out_dtype=out_dtype, epilogue=epilogue,
+                      bias=pad_bias(bias, n, bp.shape[1]))
     return out[:m, :n]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "dataflow", "p1", "p2", "interpret", "out_dtype"))
+    "dataflow", "p1", "p2", "interpret", "out_dtype", "epilogue"))
 def batched_gemm(a: jax.Array, b: jax.Array,
                  dataflow: Dataflow = Dataflow.NS,
                  p1: int = 128, p2: int = 128,
                  interpret: Optional[bool] = None,
-                 out_dtype=None) -> jax.Array:
+                 out_dtype=None, epilogue: str = "none",
+                 bias: Optional[jax.Array] = None) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
     g, m, k = a.shape
     _, _, n = b.shape
@@ -67,5 +71,7 @@ def batched_gemm(a: jax.Array, b: jax.Array,
     ap = pad_to(a, (0, bm, bk))
     bp = pad_to(b, (0, bk, bn))
     out = batched_gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
-                              interpret=interpret, out_dtype=out_dtype)
+                              interpret=interpret, out_dtype=out_dtype,
+                              epilogue=epilogue,
+                              bias=pad_bias(bias, n, bp.shape[2]))
     return out[:, :m, :n]

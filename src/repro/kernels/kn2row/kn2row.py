@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import apply_epilogue
+
 try:
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
@@ -78,12 +80,15 @@ def unit_conv_gemms(x2d: jax.Array, w: jax.Array, *, bm: int, bn: int,
 
 def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
                    stride: int = 1, pad_top: int = 0, pad_left: int = 0,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True, epilogue: str = "none",
+                   bias: jax.Array = None) -> jax.Array:
     """p: (K1K2, H1p, H2p, Cout) — patches already zero-padded so that the
     (k1, k2) shift is a pure dynamic_slice; returns (O1, O2, Cout).
 
     Eq. 4: z[y, x] = Σ_{k1,k2} p_{k1,k2}[S·y + k1 - pt, S·x + k2 - pl],
-    realized as slice(start=(k1, k2)) on the padded patch tensor.
+    realized as slice(start=(k1, k2)) on the padded patch tensor. As the
+    final kn2row stage, it owns the fused epilogue: the accumulated output
+    streams through ReLU/bias at the flush, before ever leaving VMEM.
     """
     g, h1p, h2p, c = p.shape
     assert g == k1 * k2
@@ -92,7 +97,11 @@ def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
     assert h1p >= span_r + k1 - 1 and h2p >= span_c + k2 - 1, \
         (p.shape, span_r, span_c)
 
-    def kernel(p_ref, o_ref, acc_ref):
+    def kernel(p_ref, *rest):
+        if len(rest) == 3:
+            bias_ref, o_ref, acc_ref = rest
+        else:
+            (o_ref, acc_ref), bias_ref = rest, None
         gg = pl.program_id(0)
 
         @pl.when(gg == 0)
@@ -107,16 +116,24 @@ def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
 
         @pl.when(gg == g - 1)
         def _flush():
-            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+            acc = apply_epilogue(acc_ref[...], epilogue,
+                                 bias_ref[0] if bias_ref is not None else None)
+            o_ref[...] = acc.astype(o_ref.dtype)
 
     scratch = (pltpu.VMEM((o1, o2, c), jnp.float32) if _VMEM is not None
                else pl.ANY)  # pragma: no cover
+    in_specs = [pl.BlockSpec((1, h1p, h2p, c), lambda gg: (gg, 0, 0, 0))]
+    operands = [p]
+    if bias is not None:
+        assert bias.shape == (1, c), (bias.shape, c)
+        in_specs.append(pl.BlockSpec((1, c), lambda gg: (0, 0)))
+        operands.append(bias)
     return pl.pallas_call(
         kernel,
         grid=(g,),
-        in_specs=[pl.BlockSpec((1, h1p, h2p, c), lambda gg: (gg, 0, 0, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((o1, o2, c), lambda gg: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((o1, o2, c), p.dtype),
         scratch_shapes=[scratch],
         interpret=interpret,
-    )(p)
+    )(*operands)

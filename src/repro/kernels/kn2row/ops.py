@@ -15,21 +15,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import Dataflow
-from repro.kernels.common import batchable, ceil_to, default_interpret
+from repro.kernels.common import (batchable, ceil_to, default_interpret,
+                                  pad_bias)
 from repro.kernels.gemm.ops import dataflow_blocks
 from repro.kernels.kn2row.kn2row import pad_accumulate, unit_conv_gemms
 
 
 @batchable
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "dataflow", "p1", "p2", "interpret"))
+    "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue"))
 def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: str = "SAME",
                 dataflow: Dataflow = Dataflow.NS,
                 p1: int = 128, p2: int = 128,
-                interpret: Optional[bool] = None) -> jax.Array:
+                interpret: Optional[bool] = None,
+                epilogue: str = "none",
+                bias: Optional[jax.Array] = None) -> jax.Array:
     """Convolution via kn2row. x: (H, W, Cin) or (B, H, W, Cin),
-    w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout)."""
+    w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout). ``epilogue`` fuses the
+    post-GEMM auxiliary unit into the final pad-accumulate flush."""
     interpret = default_interpret() if interpret is None else interpret
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
@@ -61,5 +65,6 @@ def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
     # accumulate on-chip.
     p = jnp.pad(p, ((0, 0), (pt, k1), (pl_, k2), (0, 0)))
     out = pad_accumulate(p, k1=k1, k2=k2, o1=o1, o2=o2, stride=stride,
-                         interpret=interpret)
+                         interpret=interpret, epilogue=epilogue,
+                         bias=pad_bias(bias, c_out, np_))
     return out[:, :, :c_out]

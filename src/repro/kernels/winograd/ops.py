@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import Dataflow
-from repro.kernels.common import batchable, ceil_to, default_interpret
+from repro.kernels.common import (apply_epilogue, batchable, ceil_to,
+                                  default_interpret)
 from repro.kernels.gemm.ops import batched_gemm
 from repro.kernels.winograd.winograd import (input_transform, matrices,
                                              output_transform,
@@ -24,8 +25,11 @@ from repro.kernels.winograd.winograd import (input_transform, matrices,
 
 def _conv_f_mr(x: jax.Array, w: jax.Array, m: int, o1: int, o2: int,
                pt: int, pl_: int, dataflow: Dataflow, p1: int, p2: int,
-               interpret: bool) -> jax.Array:
-    """Single-round F(m,r) same-stride-1 conv core; x unpadded (H, W, Cin)."""
+               interpret: bool, epilogue: str = "none",
+               bias: Optional[jax.Array] = None) -> jax.Array:
+    """Single-round F(m,r) same-stride-1 conv core; x unpadded (H, W, Cin).
+    The epilogue fuses into the output transform — the last kernel of the
+    Winograd pipeline."""
     r = w.shape[0]
     t = m + r - 1
     h, w_dim, c_in = x.shape
@@ -41,22 +45,28 @@ def _conv_f_mr(x: jax.Array, w: jax.Array, m: int, o1: int, o2: int,
                       interpret=interpret,
                       out_dtype=x.dtype)              # (T², n_tiles, Cout)
     y = output_transform(mm, m=m, r=r, tiles_y=ty, tiles_x=tx,
-                         interpret=interpret)
+                         interpret=interpret, epilogue=epilogue,
+                         bias=(bias.reshape(1, c_out)
+                               if bias is not None else None))
     return y[:o1, :o2, :c_out]
 
 
 @batchable
 @functools.partial(jax.jit, static_argnames=(
-    "m", "padding", "dataflow", "p1", "p2", "interpret"))
+    "m", "padding", "dataflow", "p1", "p2", "interpret", "epilogue"))
 def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
                   padding: str = "SAME",
                   dataflow: Dataflow = Dataflow.NS,
                   p1: int = 128, p2: int = 128,
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  interpret: Optional[bool] = None,
+                  epilogue: str = "none",
+                  bias: Optional[jax.Array] = None) -> jax.Array:
     """Winograd convolution, stride 1, square K×K kernels.
 
     K > r runs in ceil(K/r)² rounds of shifted r×r sub-kernels with output
-    accumulation (§6.1.2's K1K2/r² rounds).
+    accumulation (§6.1.2's K1K2/r² rounds). Single-round kernels fuse the
+    epilogue into the output transform; the multi-round path must apply it
+    after the cross-round accumulation (ReLU does not distribute over +).
     """
     interpret = default_interpret() if interpret is None else interpret
     r = 3
@@ -73,7 +83,8 @@ def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
 
     if k1 == r:
         return _conv_f_mr(x, w, m, o1, o2, pt_full, pl_full,
-                          dataflow, p1, p2, interpret)
+                          dataflow, p1, p2, interpret,
+                          epilogue=epilogue, bias=bias)
 
     # Multi-round: pad kernel to multiple of r and accumulate shifted rounds.
     rounds = -(-k1 // r)
@@ -92,4 +103,4 @@ def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
             # VALID conv of xs with sub gives exactly (o1, o2).
             acc = acc + _conv_f_mr(xs, sub, m, o1, o2, 0, 0,
                                    dataflow, p1, p2, interpret)
-    return acc
+    return apply_epilogue(acc, epilogue, bias)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import apply_epilogue
+
 # ---------------------------------------------------------------------------
 # Transform matrices (Lavin & Gray). F(2,3) uses only ±1, ±1/2 — the paper
 # notes these reduce to shift-adds on FPGA; on TPU they are VPU constants.
@@ -123,28 +125,46 @@ def input_transform(x: jax.Array, *, m: int, r: int, tiles_y: int,
 # ---------------------------------------------------------------------------
 
 def output_transform(m_arr: jax.Array, *, m: int, r: int, tiles_y: int,
-                     tiles_x: int, interpret: bool = True) -> jax.Array:
-    """m_arr: (T², tiles_y·tiles_x, Cout) → (tiles_y·m, tiles_x·m, Cout)."""
+                     tiles_x: int, interpret: bool = True,
+                     epilogue: str = "none",
+                     bias: jax.Array = None) -> jax.Array:
+    """m_arr: (T², tiles_y·tiles_x, Cout) → (tiles_y·m, tiles_x·m, Cout).
+
+    As the final Winograd stage it owns the fused epilogue: Y = Aᵀ M A flows
+    through ReLU/bias while still VMEM-resident. ``bias`` (if given): (1, C).
+    """
     t = m + r - 1
     tt, n_tiles, c = m_arr.shape
     assert tt == t * t and n_tiles == tiles_y * tiles_x
     at_host = jnp.asarray(matrices(m, r)[2])
 
-    def kernel(m_ref, at_ref, y_ref):
+    def kernel(m_ref, at_ref, *rest):
+        if len(rest) == 2:
+            bias_ref, y_ref = rest
+        else:
+            (y_ref,), bias_ref = rest, None
         at = at_ref[...]
         blk = m_ref[...].astype(jnp.float32)      # (T², tiles_x, C)
         mm = blk.reshape(t, t, tiles_x, c)
         y = jnp.einsum("mi,ijxc,nj->xmnc", at, mm, at)  # (tiles_x, m, m, c)
+        y = apply_epilogue(y, epilogue,
+                           bias_ref[0] if bias_ref is not None else None)
         y_ref[...] = y.transpose(1, 0, 2, 3).reshape(
             m, tiles_x * m, c).astype(y_ref.dtype)
 
+    in_specs = [pl.BlockSpec((t * t, tiles_x, c), lambda i: (0, i, 0)),
+                pl.BlockSpec((m, t), lambda i: (0, 0))]
+    operands = [m_arr, at_host]
+    if bias is not None:
+        assert bias.shape == (1, c), (bias.shape, c)
+        in_specs.append(pl.BlockSpec((1, c), lambda i: (0, 0)))
+        operands.append(bias)
     return pl.pallas_call(
         kernel,
         grid=(tiles_y,),
-        in_specs=[pl.BlockSpec((t * t, tiles_x, c), lambda i: (0, i, 0)),
-                  pl.BlockSpec((m, t), lambda i: (0, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m, tiles_x * m, c), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((tiles_y * m, tiles_x * m, c),
                                        m_arr.dtype),
         interpret=interpret,
-    )(m_arr, at_host)
+    )(*operands)

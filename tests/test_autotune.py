@@ -1,0 +1,121 @@
+"""core.autotune: measured per-layer binding search + tuning record.
+
+The autotuner benchmarks candidate (algorithm, dataflow, p1, p2, backend)
+bindings on the actual device and records winners keyed by conv signature;
+``lower_plan`` consumes the record to override the cost-model binding.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.cnn.executor import compile_plan, init_params
+from repro.cnn.models import vgg16
+from repro.core.algorithms import (IM2COL, KN2ROW, WINO_2_3, WINO_4_3)
+from repro.core.autotune import (Binding, TuningRecord, algo_from_key,
+                                 autotune_graph, candidate_bindings,
+                                 conv_key, tune_layer)
+from repro.core.cost_model import Dataflow
+from repro.core.graph import ConvMeta
+from repro.core.mapper import lower_plan
+
+CONV = ConvMeta(c_in=4, c_out=6, h1=8, h2=8, k1=3, k2=3, stride=1)
+
+
+def test_conv_key_identifies_shape():
+    assert conv_key(CONV) == "c4x6_h8x8_k3x3_s1_same"
+    assert conv_key(CONV) != conv_key(
+        ConvMeta(c_in=4, c_out=6, h1=8, h2=8, k1=3, k2=3, stride=2))
+
+
+@pytest.mark.parametrize("algo", [IM2COL, KN2ROW, WINO_2_3, WINO_4_3])
+def test_algo_key_roundtrip(algo):
+    assert algo_from_key(algo.key) == algo
+
+
+def test_algo_from_key_rejects_garbage():
+    with pytest.raises(ValueError, match="unparseable"):
+        algo_from_key("fft")
+
+
+def test_candidate_bindings_shape_of_search_space():
+    """lax is algorithm-independent (1 candidate); reference ignores the
+    block binding (1 candidate/algo); pallas sweeps dataflows × (p1, p2)."""
+    cands = candidate_bindings(CONV, p1p2=[(128, 128), (256, 128)])
+    lax = [c for c in cands if c.backend == "lax"]
+    assert len(lax) == 1
+    ref = [c for c in cands if c.backend == "reference"]
+    pal = [c for c in cands if c.backend == "pallas"]
+    assert len(ref) == len({c.algo_key for c in ref})      # one per algo
+    per_algo = {}
+    for c in pal:
+        per_algo.setdefault(c.algo_key, []).append(c)
+    for key, group in per_algo.items():
+        assert len(group) == 3 * 2                          # dataflows × p1p2
+    # reference-only search space collapses to one candidate per algorithm
+    ref_only = candidate_bindings(CONV, backends=("reference",))
+    assert all(c.backend == "reference" for c in ref_only)
+    assert len(ref_only) == len(ref)
+
+
+def test_tune_layer_picks_measured_min():
+    tuned = tune_layer(CONV, backends=("reference",), reps=1)
+    assert tuned.candidates                    # every candidate was timed
+    best_label, best_s = min(tuned.candidates, key=lambda c: c[1])
+    assert tuned.binding.label() == best_label
+    assert tuned.measured_s == best_s
+    assert tuned.binding.backend == "reference"
+
+
+def test_record_roundtrip_and_lowering(tmp_path):
+    rec = TuningRecord()
+    g = vgg16(res=8, scale=0.05)
+    rec = autotune_graph(g, backends=("reference",), reps=1, record=rec)
+    assert len(rec.entries) > 0
+    path = tmp_path / "tuning.json"
+    rec.save(path)
+    rec2 = TuningRecord.load(path)
+    assert rec2.entries.keys() == rec.entries.keys()
+    for key in rec.entries:
+        assert rec2.entries[key].binding == rec.entries[key].binding
+
+    # lower_plan consumes the record: every conv binding overridden
+    lowering = lower_plan(g, None, default_algo=KN2ROW, tuning=rec2)
+    for node in g.conv_nodes():
+        tuned = rec2.entries[conv_key(node.conv)]
+        low = lowering[node.id]
+        assert low.algo == tuned.binding.algo
+        assert low.backend == tuned.binding.backend
+        assert (low.p1, low.p2) == (tuned.binding.p1, tuned.binding.p2)
+        assert low.dataflow is Dataflow[tuned.binding.dataflow]
+        assert low.epilogue == "relu"          # tuning never touches epilogue
+
+
+def test_autotune_incremental_skip_known():
+    g = vgg16(res=8, scale=0.05)
+    sentinel = Binding("im2col", "NS", 128, 128, "reference")
+    rec = TuningRecord()
+    rec = autotune_graph(g, backends=("reference",), reps=1, record=rec)
+    stamped = {k: t.measured_s for k, t in rec.entries.items()}
+    # re-tuning with skip_known leaves existing entries untouched
+    rec = autotune_graph(g, backends=("reference",), reps=1, record=rec,
+                         skip_known=True)
+    assert {k: t.measured_s for k, t in rec.entries.items()} == stamped
+    assert sentinel.algo == IM2COL
+
+
+def test_tuned_compiled_plan_equivalent():
+    """A tuned record changes bindings, never the function (the §3
+    invariant extends to measured bindings)."""
+    g = vgg16(res=8, scale=0.05)
+    params = init_params(g, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    rec = autotune_graph(g, backends=("lax", "reference"), reps=1)
+    got = compile_plan(g, tuning=rec)(params, x)
+    ref = compile_plan(g)(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_version_mismatch_rejected():
+    with pytest.raises(ValueError, match="version"):
+        TuningRecord.from_json({"version": 99, "entries": {}})

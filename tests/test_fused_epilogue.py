@@ -1,0 +1,232 @@
+"""Fused-epilogue equivalence (the §3 in-pipeline auxiliary units).
+
+CONV+ReLU lowered to ONE overlay call must equal the unfused
+conv-then-relu reference for every algorithm family, on both backends,
+batched and unbatched — and the fused compiled plan must equal the unfused
+PR-1-style lowering end to end. Mixed pallas/reference backends inside one
+compiled plan must be semantically invisible.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn import layers as L
+from repro.cnn import overlay
+from repro.cnn.executor import compile_plan, forward, init_params
+from repro.cnn.models import googlenet
+from repro.core.algorithms import IM2COL, KN2ROW, WINO_2_3
+from repro.core.autotune import Binding, LayerTuning, TuningRecord, conv_key
+from repro.core.cost_model import Dataflow
+from repro.core.mapper import ConvLowering, lower_plan
+from repro.kernels.conv_im2col.ref import conv_ref
+from repro.kernels.gemm.ops import batched_gemm, gemm
+
+RNG = np.random.default_rng(7)
+
+
+def rnd(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ------------------------------------------------------------ kernel level
+@pytest.mark.parametrize("df", list(Dataflow))
+def test_gemm_epilogue_fused(df):
+    a, b = rnd(40, 24), rnd(24, 16)
+    bias = rnd(16)
+    base = np.asarray(a) @ np.asarray(b)
+    got_relu = gemm(a, b, df, 128, 128, interpret=True, epilogue="relu")
+    np.testing.assert_allclose(np.asarray(got_relu), np.maximum(base, 0),
+                               rtol=1e-5, atol=1e-5)
+    got_br = gemm(a, b, df, 128, 128, interpret=True, epilogue="bias_relu",
+                  bias=bias)
+    np.testing.assert_allclose(np.asarray(got_br),
+                               np.maximum(base + np.asarray(bias), 0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_gemm_epilogue_fused():
+    a, b = rnd(3, 16, 24), rnd(3, 24, 8)
+    bias = rnd(8)
+    base = np.einsum("gmk,gkn->gmn", np.asarray(a), np.asarray(b))
+    got = batched_gemm(a, b, interpret=True, epilogue="bias_relu", bias=bias)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.maximum(base + np.asarray(bias), 0),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- overlay level
+@pytest.mark.parametrize("algo", [IM2COL, KN2ROW, WINO_2_3])
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("batched", [False, True])
+def test_fused_conv_relu_equals_unfused(algo, use_pallas, batched):
+    """conv+ReLU fused == unfused reference, all families × backends ×
+    ranks (the tentpole equivalence)."""
+    x = rnd(2, 12, 12, 5) if batched else rnd(12, 12, 5)
+    w = rnd(3, 3, 5, 9)
+    unfused = np.maximum(np.asarray(conv_ref(x, w)), 0)
+    fused = overlay.apply_conv(x, w, algo, Dataflow.WS, 256, 128,
+                               use_pallas=use_pallas, interpret=True,
+                               epilogue="relu")
+    assert fused.shape == unfused.shape
+    np.testing.assert_allclose(np.asarray(fused), unfused,
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("algo", [IM2COL, KN2ROW, WINO_2_3])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_bias_relu(algo, use_pallas):
+    """bias+ReLU epilogue: y = relu(conv(x) + b) in one overlay call."""
+    x, w, b = rnd(10, 10, 4), rnd(3, 3, 4, 6), rnd(6)
+    want = np.maximum(np.asarray(conv_ref(x, w)) + np.asarray(b), 0)
+    got = overlay.apply_conv(x, w, algo, use_pallas=use_pallas,
+                             interpret=True, epilogue="bias_relu", bias=b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+def test_fused_multiround_winograd():
+    """K>r Winograd runs rounds of accumulation — the epilogue must apply
+    once, after the last round (ReLU does not distribute over +)."""
+    x, w = rnd(9, 9, 3), rnd(5, 5, 3, 4)
+    want = np.maximum(np.asarray(conv_ref(x, w)), 0)
+    got = overlay.apply_conv(x, w, WINO_2_3, use_pallas=True,
+                             interpret=True, epilogue="relu")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+def test_unknown_epilogue_rejected():
+    x, w = rnd(8, 8, 3), rnd(3, 3, 3, 4)
+    with pytest.raises(ValueError, match="epilogue"):
+        overlay.apply_conv(x, w, IM2COL, epilogue="gelu")
+    with pytest.raises(ValueError, match="bias"):
+        overlay.apply_conv(x, w, IM2COL, epilogue="bias")  # bias missing
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_lax_backend_with_fused_epilogue(batched):
+    """backend="lax" (XLA native conv) joins the overlay with the same
+    fused-epilogue semantics as every other backend."""
+    x = rnd(2, 11, 11, 4) if batched else rnd(11, 11, 4)
+    w, b = rnd(3, 3, 4, 6), rnd(6)
+    want = np.maximum(np.asarray(conv_ref(x, w, stride=2)) + np.asarray(b), 0)
+    got = overlay.apply_conv(x, w, KN2ROW, stride=2, backend="lax",
+                             epilogue="bias_relu", bias=b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    # backend overrides use_pallas; junk backends are rejected
+    with pytest.raises(ValueError, match="backend"):
+        overlay.apply_conv(x, w, IM2COL, backend="cuda")
+
+
+# ------------------------------------------------------ compiled-plan level
+@pytest.fixture(scope="module")
+def reduced_googlenet():
+    g = googlenet(res=56, scale=0.25)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, params
+
+
+def test_compiled_fused_equals_unfused_plan(reduced_googlenet):
+    """epilogue="relu" (fused, the new default) and epilogue="none"
+    (PR-1's conv-then-relu) compile to the same function."""
+    g, params = reduced_googlenet
+    xb = rnd(2, 56, 56, 3)
+    fused = compile_plan(g)(params, xb)
+    unfused = compile_plan(g, epilogue="none")(params, xb)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lowering_carries_epilogue_and_backend(reduced_googlenet):
+    g, _ = reduced_googlenet
+    low = lower_plan(g, None)
+    assert all(l.epilogue == "relu" and l.backend == "auto"
+               for l in low.values())
+    low = lower_plan(g, None, epilogue="none", backend="reference")
+    assert all(l.epilogue == "none" and l.backend == "reference"
+               for l in low.values())
+    # lowerings stay hashable — a (graph, lowering) pair keys one program
+    assert hash(ConvLowering(IM2COL, Dataflow.NS, 128, 128,
+                             backend="lax")) is not None
+
+
+def test_mixed_backend_compiled_plan_matches_reference_oracle(
+        reduced_googlenet):
+    """One compiled plan cycling pallas/reference/lax per conv layer equals
+    the all-reference oracle (the ROADMAP mixed-backend item)."""
+    g, params = reduced_googlenet
+    entries = {}
+    backends = ("pallas", "reference", "lax")
+    for i, node in enumerate(g.conv_nodes()):
+        key = conv_key(node.conv)
+        entries[key] = LayerTuning(
+            binding=Binding("im2col", "NS", 128, 128, backends[i % 3]),
+            measured_s=0.0, candidates=[])
+    record = TuningRecord(entries)
+    lowering = lower_plan(g, None, default_algo=IM2COL, tuning=record)
+    assert {l.backend for l in lowering.values()} == set(backends)
+
+    xb = rnd(2, 56, 56, 3)
+    mixed = compile_plan(g, default_algo=IM2COL, tuning=record,
+                         interpret=True)(params, xb)
+    oracle = compile_plan(g, default_algo=IM2COL)(params, xb)
+    np.testing.assert_allclose(np.asarray(mixed), np.asarray(oracle),
+                               rtol=2e-2, atol=2e-3)
+
+
+# -------------------------------------------------------- avg_pool overlay
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_avg_pool_via_overlay(padding, use_pallas):
+    """§3.4: AvgPool as a K×K conv with 1/(K1K2) channel-diagonal weights
+    through the overlay GEMM unit == the jnp reduce-window path, including
+    the SAME-padding valid-count division at the edges."""
+    for x in (rnd(9, 9, 5), rnd(2, 9, 9, 5)):
+        want = L.avg_pool(x, 3, 2, padding)
+        got = L.avg_pool(x, 3, 2, padding, via="overlay",
+                         use_pallas=use_pallas, interpret=True)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_executor_avg_pool_via_overlay(reduced_googlenet):
+    """The compiled program can route POOL_AVG through the overlay GEMM
+    unit without changing the network function."""
+    g, params = reduced_googlenet
+    x = rnd(56, 56, 3)
+    via_overlay = compile_plan(g, avg_pool_via="overlay")(params, x)
+    via_jnp = compile_plan(g)(params, x)
+    np.testing.assert_allclose(np.asarray(via_overlay), np.asarray(via_jnp),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_avg_pool_rejects_unknown_via():
+    with pytest.raises(ValueError, match="via"):
+        L.avg_pool(rnd(8, 8, 3), 2, 2, via="fpga")
+
+
+# ------------------------------------------------------------ serving tick
+def test_serving_engine_reuses_batch_buffer(reduced_googlenet):
+    """step() must reuse one preallocated staging buffer across ticks and
+    zero only stale tail slots — outputs stay correct over partial ticks."""
+    from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
+    g, params = reduced_googlenet
+    eng = CNNServingEngine(g, params, None, batch_size=4)
+    buf0 = eng._batch_buf
+    imgs = [np.asarray(rnd(56, 56, 3)) for _ in range(6)]
+    for rid, img in enumerate(imgs[:4]):
+        eng.submit(CNNRequest(rid=rid, image=img))
+    assert eng.step() == 4
+    # partial tick: 2 requests; slots 2-3 hold stale images and must be
+    # zeroed, slots beyond stay zero
+    for rid, img in enumerate(imgs[4:], start=4):
+        eng.submit(CNNRequest(rid=rid, image=img))
+    assert eng.step() == 2
+    assert eng._batch_buf is buf0            # no per-tick allocation
+    np.testing.assert_array_equal(eng._batch_buf[2:], 0)
+    for rid, img in enumerate(imgs):
+        want = forward(g, params, jnp.asarray(img))
+        np.testing.assert_allclose(eng.done[rid], np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)

@@ -21,6 +21,7 @@ from repro.core.cost_model import Dataflow
 from repro.core.dse import identify_parameters
 from repro.core.graph import LayerKind
 from repro.core.mapper import lower_plan, map_network
+from repro.kernels.common import apply_epilogue
 from repro.kernels.conv_im2col.ref import conv_ref
 
 RNG = np.random.default_rng(0)
@@ -56,10 +57,12 @@ def mixed_plan(mapped_googlenet):
 
 
 def _lax_forward(graph, params, x):
-    """Reference executor: same graph walk, conv replaced by lax.conv."""
+    """Reference executor: same graph walk, conv replaced by lax.conv.
+    Must honor the fused ``epilogue`` the executor now hands every conv."""
     def lax_conv(xi, w, algo, dataflow=Dataflow.NS, p1=128, p2=128, *,
-                 stride=1, padding="SAME", **kw):
-        return conv_ref(xi, w, stride=stride, padding=padding)
+                 stride=1, padding="SAME", epilogue="none", bias=None, **kw):
+        y = conv_ref(xi, w, stride=stride, padding=padding)
+        return apply_epilogue(y, epilogue, bias)
     with pytest.MonkeyPatch.context() as mp:
         mp.setattr(overlay, "apply_conv", lax_conv)
         return forward(graph, params, x)
