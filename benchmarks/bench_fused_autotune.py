@@ -31,7 +31,8 @@ import numpy as np
 from repro.cnn.executor import compile_plan, init_params
 from repro.cnn.models import googlenet, vgg16
 from repro.core.autotune import (Binding, LayerTuning, TuningRecord,
-                                 autotune_graph, benchmark_binding, conv_key)
+                                 autotune_graph, benchmark_binding, conv_key,
+                                 record_key)
 from repro.core.cost_model import Dataflow
 from repro.core.dse import identify_parameters
 from repro.core.mapper import map_network
@@ -92,7 +93,7 @@ def _per_layer_rows(tag: str, g, plan, record: TuningRecord,
         model = Binding(plan.assignment[node.id].key,
                         plan.dataflows[node.id].name,
                         plan.p1, plan.p2, "reference")
-        tuned = record.entries[key]
+        tuned = record.lookup(node.conv)
         # tune_layer already timed the model baseline (first candidate);
         # only re-measure if this layer's plan binding wasn't the baseline.
         timed = dict(tuned.candidates)
@@ -112,7 +113,7 @@ def _mixed_backend_row(tag: str, g) -> List[str]:
     numerically identical (to tolerance) to the all-reference oracle."""
     entries = {}
     for i, node in enumerate(g.conv_nodes()):
-        entries[conv_key(node.conv)] = LayerTuning(
+        entries[record_key(node.conv)] = LayerTuning(
             binding=Binding("im2col", "NS", 128, 128,
                             "pallas" if i % 2 == 0 else "reference"),
             measured_s=0.0, candidates=[])

@@ -17,6 +17,7 @@ REPO = Path(__file__).resolve().parents[1]
 def main() -> None:
     import benchmarks.bench_algorithms as ba
     import benchmarks.bench_dse as bd
+    import benchmarks.bench_dynamic_batching as bdb
     import benchmarks.bench_e2e as be
     import benchmarks.bench_fused_autotune as bf
     import benchmarks.bench_roofline as br
@@ -26,6 +27,7 @@ def main() -> None:
     for name, mod in (("bench_algorithms", ba), ("bench_utilization", bu),
                       ("bench_dse", bd), ("bench_e2e", be),
                       ("bench_fused_autotune", bf),
+                      ("bench_dynamic_batching", bdb),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

@@ -62,8 +62,10 @@ def main() -> None:
 
     # 6. Plan compilation: every per-layer algorithm + dataflow/(p1, p2)
     # choice is closed over at trace time; the result is one XLA program
-    # that accepts (H, W, C) or batched (B, H, W, C) inputs.
-    run = compile_plan(g, plan)
+    # that accepts (H, W, C) or batched (B, H, W, C) inputs. GoogleNet
+    # lowers CONV+bias+ReLU fused ("bias_relu" — init_params created the
+    # per-conv biases).
+    run = compile_plan(g, plan, epilogue="bias_relu")
     xb = jax.random.normal(jax.random.PRNGKey(2), (8, 56, 56, 3))
     yb = jax.block_until_ready(run(params, xb))       # compile + run
     t0 = time.time()

@@ -36,7 +36,11 @@ Params = Dict[int, Dict[str, jax.Array]]
 
 
 def init_params(graph: Graph, key: jax.Array,
-                dtype=jnp.float32) -> Params:
+                dtype=jnp.float32, conv_bias: bool = True) -> Params:
+    """Per-layer parameter pytree. Convs get a zero-initialized per-channel
+    bias (``conv_bias=False`` reproduces the bias-free PR-2 layout) which
+    the ``bias``/``bias_relu`` fused epilogues consume — so GoogleNet /
+    Inception lower CONV+bias+ReLU to ONE overlay call per layer."""
     params: Params = {}
     for nid in graph.topo_order():
         node = graph.nodes[nid]
@@ -47,6 +51,8 @@ def init_params(graph: Graph, key: jax.Array,
             w = jax.random.normal(sub, (m.k1, m.k2, m.c_in, m.c_out),
                                   dtype) / jnp.sqrt(fan_in)
             params[nid] = {"w": w}
+            if conv_bias:
+                params[nid]["b"] = jnp.zeros((m.c_out,), dtype)
         elif node.kind is LayerKind.FC:
             key, sub = jax.random.split(key)
             fin = int(node.attrs["in_features"])
@@ -78,6 +84,12 @@ def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
             low = lowering[nid]
             m = node.conv
             pad = "SAME" if m.pad == "same" else "VALID"
+            epi = low.epilogue
+            bias = params[nid].get("b") if epi.startswith("bias") else None
+            if epi.startswith("bias") and bias is None:
+                # Bias-free legacy params under a bias-carrying lowering:
+                # degrade to the bias-less epilogue (conv math unchanged).
+                epi = "relu" if epi.endswith("relu") else "none"
             y = overlay.apply_conv(ins[0], params[nid]["w"], low.algo,
                                    low.dataflow, low.p1, low.p2,
                                    stride=m.stride, padding=pad,
@@ -85,10 +97,10 @@ def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
                                    backend=(None if low.backend == "auto"
                                             else low.backend),
                                    interpret=interpret,
-                                   epilogue=low.epilogue)
+                                   epilogue=epi, bias=bias)
             # The graph semantics are CONV→ReLU; a relu-carrying epilogue
             # already ran it inside the overlay call — ONE call, fused.
-            values[nid] = y if low.epilogue.endswith("relu") else L.relu(y)
+            values[nid] = y if epi.endswith("relu") else L.relu(y)
         elif node.kind is LayerKind.POOL_MAX:
             pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
             values[nid] = L.max_pool(ins[0], int(node.attrs["k"]),
@@ -127,12 +139,14 @@ def forward(graph: Graph, params: Params,
             use_pallas: bool = False,
             interpret: Optional[bool] = None,
             epilogue: str = "relu",
-            tuning=None) -> jax.Array:
+            tuning=None,
+            tuning_batch: Optional[int] = None) -> jax.Array:
     """Eager inference. ``x``: (H, W, C) single image (the paper's no-batch
     low-latency setting) or (B, H, W, C) batch. Each call re-interprets the
     plan in Python — use ``compile_plan`` for the dispatch-free hot path."""
     lowering = lower_plan(graph, plan, default_algo,
-                          epilogue=epilogue, tuning=tuning)
+                          epilogue=epilogue, tuning=tuning,
+                          batch=tuning_batch)
     return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
 
 
@@ -142,6 +156,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  interpret: Optional[bool] = None,
                  epilogue: str = "relu",
                  tuning=None,
+                 tuning_batch: Optional[int] = None,
                  avg_pool_via: str = "jnp"
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
@@ -161,12 +176,16 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     conv-then-relu lowering (kept for benchmarking). A ``tuning`` record
     from ``core.autotune`` replaces cost-model bindings with measured
     winners, including per-layer pallas/reference backend selection inside
-    this single compiled program. ``avg_pool_via="overlay"`` routes AvgPool
-    layers through the overlay's GEMM unit (§3.4) instead of the jnp
-    reduce-window.
+    this single compiled program; ``tuning_batch`` picks the batch bucket
+    whose measured winners bind this executable (None → bucket 1), so a
+    bucketed serving engine compiles one program per bucket, each under the
+    bindings measured at that batch size. ``avg_pool_via="overlay"`` routes
+    AvgPool layers through the overlay's GEMM unit (§3.4) instead of the
+    jnp reduce-window.
     """
     lowering = lower_plan(graph, plan, default_algo,
-                          epilogue=epilogue, tuning=tuning)
+                          epilogue=epilogue, tuning=tuning,
+                          batch=tuning_batch)
 
     @jax.jit
     def run(params: Params, x: jax.Array) -> jax.Array:

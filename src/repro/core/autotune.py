@@ -19,8 +19,13 @@ Typical use::
     record.save("tuning.json")
     run = compile_plan(graph, plan, tuning=record)  # measured bindings
 
-Records are shape-keyed, so one record transfers between graphs that share
-conv signatures, and re-tuning is incremental (``skip_known``).
+Records are keyed by ``(conv signature, batch bucket)``: bindings do not
+rank identically at batch 1 and batch 8, so the serving tier tunes once per
+batch bucket (``autotune_buckets``) and each bucket's compiled executable
+consumes the winner measured *at that batch size*
+(``lower_plan(..., tuning=record, batch=bucket)``). Signature keys still
+transfer between graphs that share conv shapes, and re-tuning is
+incremental (``skip_known``).
 """
 from __future__ import annotations
 
@@ -44,7 +49,11 @@ from repro.core.mapper import ConvLowering, ExecutionPlan
 # back — that's the point of measuring).
 BACKENDS = ("lax", "reference", "pallas")
 
-RECORD_VERSION = 1
+# Version 2: entries are keyed by (conv signature, batch bucket) —
+# "sig@bN" — instead of the bare signature; version-1 blobs are migrated
+# on load (their entries become bucket-1 entries, or bucket meta["batch"]
+# when the record was measured at a batch size).
+RECORD_VERSION = 2
 
 
 def conv_key(conv: ConvMeta) -> str:
@@ -53,6 +62,22 @@ def conv_key(conv: ConvMeta) -> str:
     measured winner."""
     return (f"c{conv.c_in}x{conv.c_out}_h{conv.h1}x{conv.h2}"
             f"_k{conv.k1}x{conv.k2}_s{conv.stride}_{conv.pad}")
+
+
+def record_key(conv: ConvMeta, batch: Optional[int] = None) -> str:
+    """Full tuning-record key: conv signature plus the batch bucket the
+    binding was measured at. ``batch=None`` (the single-image setting)
+    records as bucket 1 — a batch-1 tick and a single image induce the
+    same per-image GEMMs."""
+    return f"{conv_key(conv)}@b{int(batch or 1)}"
+
+
+def parse_record_key(key: str) -> Tuple[str, int]:
+    """Inverse of ``record_key``: "sig@bN" → (sig, N)."""
+    sig, _, bucket = key.rpartition("@b")
+    if not sig or not bucket.isdigit():
+        raise ValueError(f"unparseable record key {key!r}")
+    return sig, int(bucket)
 
 
 def algo_from_key(key: str) -> Algorithm:
@@ -86,15 +111,18 @@ class Binding:
 
 @dataclasses.dataclass
 class LayerTuning:
-    """Measured winner for one conv signature."""
+    """Measured winner for one (conv signature, batch bucket)."""
     binding: Binding
     measured_s: float
     # (label, seconds) for every candidate tried — kept for analysis.
     candidates: List[Tuple[str, float]]
+    # Batch bucket the measurement ran at (1 = single image).
+    batch: int = 1
 
 
 class TuningRecord:
-    """Conv-signature → measured best binding, JSON round-trippable."""
+    """(conv signature, batch bucket) → measured best binding; JSON
+    round-trippable. Entry keys are ``record_key`` strings ("sig@bN")."""
 
     def __init__(self, entries: Optional[Dict[str, LayerTuning]] = None,
                  meta: Optional[Dict[str, object]] = None) -> None:
@@ -102,13 +130,39 @@ class TuningRecord:
         self.meta: Dict[str, object] = dict(meta or {})
 
     # ------------------------------------------------------------ lookup
-    def lookup(self, conv: ConvMeta) -> Optional[LayerTuning]:
-        return self.entries.get(conv_key(conv))
+    def buckets_for(self, conv: ConvMeta) -> List[int]:
+        """Batch buckets this record has measured for ``conv``, ascending."""
+        sig = conv_key(conv)
+        out = []
+        for key in self.entries:
+            k_sig, bucket = parse_record_key(key)
+            if k_sig == sig:
+                out.append(bucket)
+        return sorted(out)
 
-    def lowering_for(self, conv: ConvMeta) -> Optional[ConvLowering]:
+    def lookup(self, conv: ConvMeta,
+               batch: Optional[int] = None) -> Optional[LayerTuning]:
+        """The entry measured at ``batch`` (bucket-matched). Without an
+        exact bucket match, fall back to the largest tuned bucket below the
+        requested one (closest smaller workload), else the smallest above —
+        so a batch-1-only record still serves every bucket, just without
+        per-bucket specialization."""
+        want = int(batch or 1)
+        hit = self.entries.get(record_key(conv, want))
+        if hit is not None:
+            return hit
+        buckets = self.buckets_for(conv)
+        if not buckets:
+            return None
+        below = [b for b in buckets if b < want]
+        pick = below[-1] if below else buckets[0]
+        return self.entries[record_key(conv, pick)]
+
+    def lowering_for(self, conv: ConvMeta,
+                     batch: Optional[int] = None) -> Optional[ConvLowering]:
         """The measured binding as a ConvLowering fragment (epilogue is the
         caller's concern — tuning only overrides the execution binding)."""
-        hit = self.lookup(conv)
+        hit = self.lookup(conv, batch)
         if hit is None:
             return None
         b = hit.binding
@@ -125,6 +179,7 @@ class TuningRecord:
                     "binding": dataclasses.asdict(t.binding),
                     "measured_s": t.measured_s,
                     "candidates": [[lbl, s] for lbl, s in t.candidates],
+                    "batch": t.batch,
                 }
                 for key, t in self.entries.items()
             },
@@ -132,17 +187,28 @@ class TuningRecord:
 
     @classmethod
     def from_json(cls, blob: Dict[str, object]) -> "TuningRecord":
-        if blob.get("version") != RECORD_VERSION:
-            raise ValueError(f"tuning record version {blob.get('version')} "
+        version = blob.get("version")
+        if version not in (1, RECORD_VERSION):
+            raise ValueError(f"tuning record version {version} "
                              f"!= {RECORD_VERSION}")
+        meta = dict(blob.get("meta", {}))                  # type: ignore
+        # v1 records were keyed by bare signature; the whole record was
+        # measured at one batch size (meta["batch"], None = single image).
+        v1_bucket = int(meta.get("batch") or 1) if version == 1 else None
         entries = {}
         for key, ent in blob.get("entries", {}).items():   # type: ignore
+            if version == 1:
+                key = f"{key}@b{v1_bucket}"
+                bucket = v1_bucket
+            else:
+                bucket = int(ent.get("batch", parse_record_key(key)[1]))
             entries[key] = LayerTuning(
                 binding=Binding(**ent["binding"]),
                 measured_s=float(ent["measured_s"]),
                 candidates=[(lbl, float(s)) for lbl, s in ent["candidates"]],
+                batch=bucket,
             )
-        return cls(entries, blob.get("meta", {}))          # type: ignore
+        return cls(entries, meta)
 
     def save(self, path) -> None:
         Path(path).write_text(json.dumps(self.to_json(), indent=2))
@@ -269,7 +335,7 @@ def tune_layer(conv: ConvMeta, *,
         assert baseline is not None and base_s is not None
         best = (baseline, base_s)
     return LayerTuning(binding=best[0], measured_s=best[1],
-                       candidates=results)
+                       candidates=results, batch=int(batch or 1))
 
 
 def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
@@ -292,8 +358,9 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
     ``baseline_backend``) becomes the hysteresis baseline a challenger must
     beat by ``min_improvement`` — so a tuned plan can only diverge from the
     model's prediction where the device measurably disagrees. Passing an
-    existing ``record`` makes tuning incremental: signatures already
-    recorded are skipped (``skip_known=True``).
+    existing ``record`` makes tuning incremental: (signature, bucket) pairs
+    already recorded are skipped (``skip_known=True``). Entries land under
+    batch bucket ``batch`` (None → bucket 1, measured on a single image).
     """
     if p1p2 is None:
         p1p2 = [(128, 128)]
@@ -303,11 +370,14 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
     record.meta.setdefault("backend", jax.default_backend())
     record.meta.setdefault("reps", reps)
     record.meta.setdefault("min_improvement", min_improvement)
-    record.meta.setdefault("batch", batch)
+    bucket = int(batch or 1)
+    buckets = set(record.meta.get("buckets", []))
+    buckets.add(bucket)
+    record.meta["buckets"] = sorted(buckets)
 
     seen: Dict[str, Tuple[ConvMeta, Optional[Binding]]] = {}
     for node in graph.conv_nodes():
-        key = conv_key(node.conv)
+        key = record_key(node.conv, bucket)
         if key in seen:
             continue
         baseline = None
@@ -332,4 +402,29 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
                   f"{tuned.measured_s * 1e6:.0f}us "
                   f"({len(tuned.candidates)} candidates, "
                   f"{time.perf_counter() - t0:.1f}s)")
+    return record
+
+
+def autotune_buckets(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
+                     buckets: Sequence[int] = (1, 2, 4, 8),
+                     record: Optional[TuningRecord] = None,
+                     verbose: bool = False,
+                     **kwargs) -> TuningRecord:
+    """Tune every unique conv signature at every serving batch bucket.
+
+    One record holds all buckets; ``lower_plan(..., tuning=record,
+    batch=bucket)`` then binds each bucket's executable to the winner
+    measured at that batch size (the serving engine compiles one program
+    per bucket — see ``serving.cnn_engine``). Bucket 1 is measured on a
+    single image, matching the paper's no-batch low-latency setting;
+    larger buckets measure the batched (B, H, W, C) overlay path.
+
+    ``kwargs`` forward to ``autotune_graph`` (backends, reps, dataflows,
+    interpret, ...); tuning stays incremental across calls via ``record``.
+    """
+    record = record if record is not None else TuningRecord()
+    for bucket in sorted(set(int(b) for b in buckets)):
+        record = autotune_graph(graph, plan,
+                                batch=None if bucket == 1 else bucket,
+                                record=record, verbose=verbose, **kwargs)
     return record

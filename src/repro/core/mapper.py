@@ -85,7 +85,8 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                default_algo: Algorithm = IM2COL, *,
                epilogue: str = "relu",
                backend: str = "auto",
-               tuning: Optional["TuningRecord"] = None
+               tuning: Optional["TuningRecord"] = None,
+               batch: Optional[int] = None
                ) -> Dict[int, ConvLowering]:
     """Lower an ExecutionPlan to the static spec consumed at trace time.
 
@@ -95,8 +96,11 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
     ``epilogue``/``backend`` seed every layer's lowering; a ``tuning``
     record (``core.autotune``) overrides the cost-model binding — algorithm,
     dataflow, (p1, p2) blocks and backend — per layer with the *measured*
-    winner, keyed by the layer's conv signature. Layers without a record
-    entry keep the model-predicted binding.
+    winner, keyed by (conv signature, batch bucket). ``batch`` selects the
+    bucket the lowered program will serve (None → bucket 1): bindings do
+    not rank identically across batch sizes, so a bucketed serving engine
+    lowers one spec per bucket. Layers without a record entry keep the
+    model-predicted binding.
     """
     out: Dict[int, ConvLowering] = {}
     for node in graph.conv_nodes():
@@ -110,7 +114,7 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                 plan.dataflows.get(nid, Dataflow.NS),
                 plan.p1, plan.p2, epilogue, backend)
         if tuning is not None:
-            tuned = tuning.lowering_for(node.conv)
+            tuned = tuning.lowering_for(node.conv, batch=batch)
             if tuned is not None:
                 low = dataclasses.replace(
                     low, algo=tuned.algo, dataflow=tuned.dataflow,

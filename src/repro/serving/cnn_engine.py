@@ -1,18 +1,34 @@
-"""Batched CNN serving engine over a compiled overlay program.
+"""Bucketed dynamic-batching CNN serving engine over compiled overlay
+programs.
 
-Mirrors ``serving.engine``'s queue/slot pattern for the CNN side: incoming
-single-image requests queue up; each tick packs up to ``batch_size`` of them
-into one fixed-shape batch and runs the ``compile_plan``-lowered program —
-one XLA dispatch for the whole batch, no per-request Python graph walk.
+PR-2's engine ran ONE fixed batch shape: a lone request paid the full
+batch-8 latency and bursts queued behind a single executable — the
+utilization cliff DYNAMAP's dynamic-mapping overlay exists to avoid (§3).
+This engine compiles one overlay program per *batch bucket* (powers of two
+up to ``batch_size``) and schedules ticks against a per-request latency
+SLO:
 
-The batch shape is fixed (short ticks are zero-padded) so exactly one
-compiled executable serves all traffic; there is no recompilation between
-a full batch and a trailing partial one.
+* each bucket's executable is lowered under the ``(signature, bucket)``
+  tuning winner (``compile_plan(..., tuning_batch=bucket)``) — the binding
+  measured *at that batch size*, not the batch-1 winner;
+* ``step()`` picks the smallest bucket covering the queue. While the
+  oldest request still has deadline budget (``slo_s`` minus the bucket's
+  estimated service time), the tick *waits* to fill a larger bucket;
+  once the budget is nearly spent — or the largest bucket fills — it
+  dispatches, zero-padding any empty tail slots;
+* with ``slo_s=None`` every tick dispatches immediately through the
+  smallest covering bucket (the latency-greedy policy; also the PR-2
+  compatible default).
+
+One staging buffer sized for the largest bucket is allocated once; bucket
+dispatches slice its leading rows, and only stale slots left by a previous
+larger tick are re-zeroed (never the whole buffer).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -23,42 +39,92 @@ from repro.core.graph import Graph
 from repro.core.mapper import ExecutionPlan
 
 
+def batch_buckets(max_batch: int) -> List[int]:
+    """Power-of-two bucket ladder up to ``max_batch`` (inclusive — a
+    non-power-of-two cap becomes the top bucket)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return out
+
+
 @dataclasses.dataclass
 class CNNRequest:
     rid: int
     image: np.ndarray                  # (H, W, C)
+    # Stamped at submit() (engine clock) unless the caller provides it —
+    # trace replays inject virtual arrival times here.
+    t_submit: Optional[float] = None
 
 
 class CNNServingEngine:
-    """Batches single-image requests through one compiled plan."""
+    """Batches single-image requests through per-bucket compiled plans.
+
+    ``batch_size`` caps the largest bucket; ``buckets`` overrides the
+    power-of-two ladder (must be ascending, e.g. ``(2, 8)`` to forbid
+    singleton dispatches). ``slo_s`` is the per-request latency objective
+    driving the tick scheduler; ``clock`` injects a time source (tests and
+    trace replays pass a virtual clock). ``warmup=True`` runs one padded
+    tick per bucket at construction, pre-compiling every executable and
+    priming the per-bucket service-time estimates the scheduler uses.
+    """
 
     def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
                  batch_size: int = 8,
+                 buckets: Optional[Sequence[int]] = None,
+                 slo_s: Optional[float] = None,
                  default_algo: Algorithm = IM2COL,
                  use_pallas: bool = False,
                  interpret: Optional[bool] = None,
                  dtype=np.float32,
-                 epilogue: str = "relu",
-                 tuning=None) -> None:
+                 epilogue: str = "bias_relu",
+                 tuning=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 warmup: bool = False) -> None:
         self.graph = graph
         self.params = params
-        self.b = batch_size
+        self.buckets = (sorted(set(int(b) for b in buckets)) if buckets
+                        else batch_buckets(batch_size))
+        if self.buckets[0] < 1:
+            raise ValueError(f"buckets must be >= 1, got {self.buckets}")
+        self.b = self.buckets[-1]              # largest bucket (PR-2 name)
+        self.slo_s = slo_s
         self.dtype = np.dtype(dtype)
         self.queue: List[CNNRequest] = []
         self.done: Dict[int, np.ndarray] = {}
+        self._clock = clock
         # The graph's input node pins the only image shape the compiled
-        # program can accept — validate against it, never against traffic.
+        # programs can accept — validate against it, never against traffic.
         src = graph.nodes[graph.source()]
         self._shape = tuple(int(d) for d in src.attrs["out_shape"])
-        self._run = compile_plan(graph, plan, default_algo=default_algo,
+        # One executable per bucket: the bucket's tuning winner (measured
+        # at that batch size) binds its lowering, so executables genuinely
+        # differ — this is the multi-executable cache the fixed-batch
+        # engine could not have.
+        self._runs = {
+            bucket: compile_plan(graph, plan, default_algo=default_algo,
                                  use_pallas=use_pallas, interpret=interpret,
-                                 epilogue=epilogue, tuning=tuning)
-        # The batch shape never changes, so allocate the staging buffer ONCE
-        # and reuse it every tick; _filled tracks how many leading slots
-        # hold stale images from the previous tick so only the padded tail
-        # that would leak them needs re-zeroing.
+                                 epilogue=epilogue, tuning=tuning,
+                                 tuning_batch=bucket)
+            for bucket in self.buckets
+        }
+        # One staging buffer sized for the largest bucket, allocated ONCE;
+        # _filled tracks how many leading slots hold stale images from the
+        # previous tick so only slots a dispatch would leak are re-zeroed.
         self._batch_buf = np.zeros((self.b,) + self._shape, self.dtype)
         self._filled = 0
+        # Measured per-bucket service time (EMA) — the scheduler's estimate
+        # of how much deadline budget a dispatch will consume.
+        self._svc: Dict[int, Optional[float]] = {b: None for b in self.buckets}
+        self.dispatches: Dict[int, int] = {b: 0 for b in self.buckets}
+        self.last_tick: Optional[Dict[str, object]] = None
+        if warmup:
+            self._warmup()
 
     # ------------------------------------------------------------ intake
     def submit(self, req: CNNRequest) -> None:
@@ -72,31 +138,111 @@ class CNNServingEngine:
                 f"request {req.rid}: image shape {img.shape} != "
                 f"graph input shape {self._shape}")
         req.image = img                # persist the validated array
+        if req.t_submit is None:
+            req.t_submit = self._clock()
         self.queue.append(req)
 
+    # --------------------------------------------------------- scheduling
+    def covering_bucket(self, n: int) -> int:
+        """Smallest bucket holding ``n`` requests (the largest bucket for
+        any overflow — excess requests wait for the next tick)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.b
+
+    def service_estimate(self, bucket: int) -> float:
+        """Expected service time of one ``bucket`` dispatch. Unmeasured
+        buckets borrow the largest measured smaller bucket's time (a lower
+        bound — batched ticks only get slower), else 0: the scheduler then
+        waits the full SLO before dispatching, which is the conservative
+        larger-batch-favoring choice."""
+        est = self._svc.get(bucket)
+        if est is not None:
+            return est
+        known = [b for b in self._svc
+                 if self._svc[b] is not None and b < bucket]
+        return self._svc[max(known)] if known else 0.0
+
+    def next_dispatch_at(self) -> Optional[float]:
+        """Engine-clock time at which ``step()`` will dispatch without new
+        arrivals — None when the queue is empty. Trace replays and serving
+        loops use this as the next tick wake-up."""
+        if not self.queue:
+            return None
+        oldest = self.queue[0]
+        assert oldest.t_submit is not None
+        if self.slo_s is None or len(self.queue) >= self.b:
+            return oldest.t_submit          # dispatch immediately
+        bucket = self.covering_bucket(len(self.queue))
+        wait = max(0.0, self.slo_s - self.service_estimate(bucket))
+        return oldest.t_submit + wait
+
     # ------------------------------------------------------------- serve
-    def step(self) -> int:
-        """One engine tick: pack up to ``batch_size`` queued requests into
-        the fixed-shape batch, run the compiled program once, scatter the
-        outputs. Returns the number of requests served."""
+    def step(self, now: Optional[float] = None, flush: bool = False) -> int:
+        """One engine tick. Picks the smallest bucket covering the queue;
+        under an SLO it *waits* (returns 0) while the oldest request still
+        has deadline budget to fill a larger bucket, and dispatches early
+        once that budget is nearly spent — ``flush=True`` dispatches
+        unconditionally (drain/shutdown). Returns the number served."""
         if not self.queue:
             return 0
-        batch, self.queue = self.queue[:self.b], self.queue[self.b:]
+        if now is None:
+            now = self._clock()
+        if not flush and len(self.queue) < self.b:
+            at = self.next_dispatch_at()
+            if at is not None and now < at:
+                return 0                    # wait to fill a larger bucket
+        bucket = self.covering_bucket(len(self.queue))
+        batch, self.queue = self.queue[:bucket], self.queue[bucket:]
         x = self._batch_buf
         for i, req in enumerate(batch):
             x[i] = req.image
-        # Zero only the tail slots still holding last tick's images.
+        # Zero only slots still holding images a *previous* tick staged —
+        # a smaller bucket after a larger one must not leak stale images
+        # into its padded tail.
         if self._filled > len(batch):
             x[len(batch):self._filled] = 0
         self._filled = len(batch)
-        out = jax.block_until_ready(self._run(self.params, x))
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._runs[bucket](self.params,
+                                                       x[:bucket]))
+        wall = time.perf_counter() - t0
         out = np.asarray(out)
         for i, req in enumerate(batch):
             self.done[req.rid] = out[i]
+        prev = self._svc[bucket]
+        self._svc[bucket] = wall if prev is None else 0.5 * prev + 0.5 * wall
+        self.dispatches[bucket] += 1
+        self.last_tick = {"bucket": bucket, "served": len(batch),
+                          "wall_s": wall, "now": now}
         return len(batch)
 
+    def reset(self) -> None:
+        """Drop queued/served request state (trace replays reuse one warmed
+        engine across traces). Compiled executables, the staging buffer and
+        the measured service-time estimates are kept — resetting never
+        forgets what the device taught us."""
+        self.queue.clear()
+        self.done.clear()
+        self.dispatches = {b: 0 for b in self.buckets}
+        self.last_tick = None
+
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:
+        """Drain the queue, ignoring SLO waits (shutdown/offline replay)."""
         for _ in range(max_ticks):
-            if self.step() == 0:
+            if self.step(flush=True) == 0:
                 break
         return self.done
+
+    # ------------------------------------------------------------ warmup
+    def _warmup(self) -> None:
+        """Compile every bucket's executable and prime service estimates by
+        timing one all-zeros tick per bucket (results discarded)."""
+        for bucket in self.buckets:
+            x = np.zeros((bucket,) + self._shape, self.dtype)
+            t0 = time.perf_counter()
+            jax.block_until_ready(self._runs[bucket](self.params, x))
+            t0 = time.perf_counter()        # second run: steady-state time
+            jax.block_until_ready(self._runs[bucket](self.params, x))
+            self._svc[bucket] = time.perf_counter() - t0

@@ -13,7 +13,7 @@ from repro.cnn.models import vgg16
 from repro.core.algorithms import (IM2COL, KN2ROW, WINO_2_3, WINO_4_3)
 from repro.core.autotune import (Binding, TuningRecord, algo_from_key,
                                  autotune_graph, candidate_bindings,
-                                 conv_key, tune_layer)
+                                 conv_key, record_key, tune_layer)
 from repro.core.cost_model import Dataflow
 from repro.core.graph import ConvMeta
 from repro.core.mapper import lower_plan
@@ -79,9 +79,10 @@ def test_record_roundtrip_and_lowering(tmp_path):
         assert rec2.entries[key].binding == rec.entries[key].binding
 
     # lower_plan consumes the record: every conv binding overridden
+    # (entries are bucket-keyed; batch=None tuning lands in bucket 1)
     lowering = lower_plan(g, None, default_algo=KN2ROW, tuning=rec2)
     for node in g.conv_nodes():
-        tuned = rec2.entries[conv_key(node.conv)]
+        tuned = rec2.entries[record_key(node.conv)]
         low = lowering[node.id]
         assert low.algo == tuned.binding.algo
         assert low.backend == tuned.binding.backend

@@ -1,0 +1,308 @@
+"""Dynamic batching serving tier (the bucketed-SLO tick scheduler).
+
+``CNNServingEngine`` compiles one overlay program per batch bucket and
+``step()`` picks the smallest bucket covering the queue under a
+per-request latency SLO: wait to fill a larger bucket while the oldest
+request has deadline budget, dispatch early once it is nearly spent.
+Edge cases pinned here: empty ticks, queues smaller than the smallest
+bucket, SLO-forced early dispatch, stale-slot zeroing across bucket
+switches, and the bucket-keyed tuning-record JSON round trip.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.executor import forward, init_params
+from repro.cnn.models import vgg16
+from repro.core.autotune import (Binding, LayerTuning, TuningRecord,
+                                 autotune_buckets, conv_key, parse_record_key,
+                                 record_key)
+from repro.core.graph import ConvMeta
+from repro.core.mapper import lower_plan
+from repro.serving.cnn_engine import (CNNRequest, CNNServingEngine,
+                                      batch_buckets)
+
+RNG = np.random.default_rng(11)
+CONV = ConvMeta(c_in=4, c_out=6, h1=8, h2=8, k1=3, k2=3, stride=1)
+
+
+class FakeClock:
+    """Deterministic injectable time source."""
+
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = vgg16(res=8, scale=0.05)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, params
+
+
+def img():
+    return np.asarray(RNG.standard_normal((8, 8, 3)), np.float32)
+
+
+def submit_n(eng, n, start_rid=0):
+    reqs = [CNNRequest(rid=start_rid + i, image=img()) for i in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    return reqs
+
+
+# ------------------------------------------------------------ bucket ladder
+def test_batch_buckets_ladder():
+    assert batch_buckets(8) == [1, 2, 4, 8]
+    assert batch_buckets(1) == [1]
+    assert batch_buckets(6) == [1, 2, 4, 6]   # non-pow2 cap = top bucket
+    with pytest.raises(ValueError, match="max_batch"):
+        batch_buckets(0)
+
+
+# --------------------------------------------------------------- empty tick
+def test_empty_tick(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=4)
+    assert eng.step() == 0
+    assert eng.next_dispatch_at() is None
+    assert eng.run_until_done() == {}
+    assert eng.last_tick is None
+
+
+# ------------------------------------------------- covering-bucket dispatch
+def test_smallest_covering_bucket_and_correctness(tiny):
+    """3 requests cover into bucket 4 (padded); outputs match per-image
+    eager forward; the bucket-8 executable is never touched."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=8)
+    assert eng.buckets == [1, 2, 4, 8]
+    reqs = submit_n(eng, 3)
+    assert eng.step() == 3
+    assert eng.last_tick["bucket"] == 4
+    assert eng.dispatches == {1: 0, 2: 0, 4: 1, 8: 0}
+    for r in reqs:
+        want = forward(g, params, jnp.asarray(r.image))
+        np.testing.assert_allclose(eng.done[r.rid], np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_queue_smaller_than_smallest_bucket(tiny):
+    """With the singleton bucket removed, a sub-bucket queue waits under
+    the SLO and pads up to the smallest bucket on flush."""
+    g, params = tiny
+    clock = FakeClock()
+    eng = CNNServingEngine(g, params, None, buckets=(4, 8), slo_s=10.0,
+                           clock=clock)
+    submit_n(eng, 2)
+    assert eng.step(now=0.0) == 0          # budget remains → wait
+    assert eng.step(now=9.0) == 0          # still inside the SLO budget
+    assert eng.step(flush=True) == 2       # drain pads into bucket 4
+    assert eng.last_tick["bucket"] == 4
+    np.testing.assert_array_equal(eng._batch_buf[2:], 0)
+
+
+# ------------------------------------------------------------ SLO scheduler
+def test_slo_forced_early_dispatch(tiny):
+    """A lone request dispatches through bucket 1 exactly when its deadline
+    budget is spent — not before, and never waiting for batch 8."""
+    g, params = tiny
+    clock = FakeClock()
+    eng = CNNServingEngine(g, params, None, batch_size=8, slo_s=5.0,
+                           clock=clock)
+    submit_n(eng, 1)                       # t_submit = 0.0
+    # no service estimate yet → wait the full SLO budget
+    assert eng.next_dispatch_at() == 5.0
+    assert eng.step(now=0.1) == 0
+    assert eng.step(now=4.9) == 0
+    assert eng.step(now=5.0) == 1          # budget spent → forced dispatch
+    assert eng.last_tick["bucket"] == 1
+    # the measured tick now informs the next deadline: budget shrinks by
+    # the bucket's estimated service time
+    submit_n(eng, 1, start_rid=1)
+    clock.t = 10.0
+    eng.queue[0].t_submit = 10.0
+    est = eng.service_estimate(1)
+    assert est > 0
+    assert eng.next_dispatch_at() == pytest.approx(10.0 + 5.0 - est)
+
+
+def test_waits_to_fill_larger_bucket_until_full(tiny):
+    """Under a generous SLO the tick keeps waiting past smaller buckets;
+    filling the largest bucket dispatches immediately."""
+    g, params = tiny
+    clock = FakeClock()
+    eng = CNNServingEngine(g, params, None, batch_size=4, slo_s=100.0,
+                           clock=clock)
+    submit_n(eng, 2)
+    assert eng.step(now=1.0) == 0          # bucket 2 would fit — but waits
+    submit_n(eng, 2, start_rid=2)          # n == largest bucket
+    assert eng.next_dispatch_at() == 0.0   # full batch → dispatch now
+    assert eng.step(now=1.0) == 4
+    assert eng.last_tick["bucket"] == 4
+
+
+def test_slo_none_dispatches_immediately(tiny):
+    """slo_s=None is the latency-greedy policy: every tick dispatches the
+    smallest covering bucket with no waiting (PR-2-compatible)."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=8)
+    submit_n(eng, 1)
+    assert eng.step() == 1
+    assert eng.last_tick["bucket"] == 1
+
+
+# ------------------------------------------------------- stale-slot zeroing
+def test_stale_slot_zeroing_across_bucket_switches(tiny):
+    """A bucket-4 tick then a bucket-1 tick: the smaller tick must zero the
+    slots the larger one staged, and outputs stay correct throughout."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=4)
+    buf0 = eng._batch_buf
+    reqs = submit_n(eng, 4)
+    assert eng.step() == 4
+    assert eng.last_tick["bucket"] == 4
+    reqs += submit_n(eng, 1, start_rid=4)
+    assert eng.step() == 1
+    assert eng.last_tick["bucket"] == 1
+    assert eng._batch_buf is buf0          # one staging buffer, ever
+    np.testing.assert_array_equal(eng._batch_buf[1:], 0)
+    # bucket switch up again: 2 requests through the bucket-2 executable
+    reqs += submit_n(eng, 2, start_rid=5)
+    assert eng.step() == 2
+    assert eng.last_tick["bucket"] == 2
+    for r in reqs:
+        want = forward(g, params, jnp.asarray(r.image))
+        np.testing.assert_allclose(eng.done[r.rid], np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_run_until_done_drains_under_slo(tiny):
+    """run_until_done flushes: SLO waits never stall a drain."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=8, slo_s=1e9,
+                           clock=FakeClock())
+    submit_n(eng, 5)
+    out = eng.run_until_done()
+    assert sorted(out) == [0, 1, 2, 3, 4]
+
+
+# ------------------------------------------- bucket-keyed tuning records
+def _tuning(backend, batch):
+    return LayerTuning(binding=Binding("im2col", "NS", 128, 128, backend),
+                       measured_s=1.0, candidates=[], batch=batch)
+
+
+def test_record_key_and_parse_roundtrip():
+    assert record_key(CONV) == conv_key(CONV) + "@b1"
+    assert record_key(CONV, 8) == conv_key(CONV) + "@b8"
+    assert parse_record_key(record_key(CONV, 4)) == (conv_key(CONV), 4)
+    with pytest.raises(ValueError, match="unparseable"):
+        parse_record_key("garbage")
+
+
+def test_bucket_keyed_record_roundtrip_json(tmp_path):
+    rec = TuningRecord({
+        record_key(CONV, 1): _tuning("reference", 1),
+        record_key(CONV, 8): _tuning("lax", 8),
+    })
+    path = tmp_path / "tuning.json"
+    rec.save(path)
+    rec2 = TuningRecord.load(path)
+    assert rec2.entries.keys() == rec.entries.keys()
+    assert json.loads(path.read_text())["version"] == 2
+    assert rec2.buckets_for(CONV) == [1, 8]
+    # exact bucket match
+    assert rec2.lookup(CONV, 1).binding.backend == "reference"
+    assert rec2.lookup(CONV, 8).binding.backend == "lax"
+    assert rec2.lookup(CONV, 8).batch == 8
+    # no exact match: largest tuned bucket below, else smallest above
+    assert rec2.lookup(CONV, 4).binding.backend == "reference"
+    assert rec2.lookup(CONV, 16).binding.backend == "lax"
+    other = ConvMeta(c_in=3, c_out=5, h1=8, h2=8, k1=3, k2=3)
+    assert rec2.lookup(other, 4) is None
+
+
+def test_v1_record_migrates_on_load():
+    """Version-1 blobs (bare-signature keys) load as bucket entries at the
+    record's measured batch size."""
+    ent = {"binding": {"algo_key": "im2col", "dataflow": "NS", "p1": 128,
+                       "p2": 128, "backend": "lax"},
+           "measured_s": 1.0, "candidates": []}
+    blob = {"version": 1, "meta": {"batch": 8},
+            "entries": {conv_key(CONV): ent}}
+    rec = TuningRecord.from_json(blob)
+    assert list(rec.entries) == [record_key(CONV, 8)]
+    assert rec.lookup(CONV, 8).batch == 8
+    # batch=None v1 records land in bucket 1
+    blob = {"version": 1, "meta": {"batch": None},
+            "entries": {conv_key(CONV): ent}}
+    assert list(TuningRecord.from_json(blob).entries) == [record_key(CONV, 1)]
+
+
+def test_autotune_buckets_and_bucket_matched_lowering(tiny):
+    """autotune_buckets fills every (signature, bucket) pair; lower_plan
+    consumes the bucket-matched winner per requested batch."""
+    g, _ = tiny
+    rec = autotune_buckets(g, buckets=(1, 2), backends=("reference",),
+                           reps=1)
+    sigs = {conv_key(n.conv) for n in g.conv_nodes()}
+    assert len(rec.entries) == 2 * len(sigs)
+    assert rec.meta["buckets"] == [1, 2]
+    for node in g.conv_nodes():
+        assert rec.buckets_for(node.conv) == [1, 2]
+    low1 = lower_plan(g, None, tuning=rec, batch=1)
+    low2 = lower_plan(g, None, tuning=rec, batch=2)
+    for node in g.conv_nodes():
+        want1 = rec.entries[record_key(node.conv, 1)].binding
+        want2 = rec.entries[record_key(node.conv, 2)].binding
+        assert low1[node.id].algo == want1.algo
+        assert low2[node.id].algo == want2.algo
+
+
+def test_engine_binds_each_bucket_to_its_tuned_winner(tiny):
+    """The engine's per-bucket executables consume the (signature, bucket)
+    winner: a record sending bucket 1 to 'reference' and bucket 2 to 'lax'
+    must produce backend-distinct lowerings per bucket — and identical
+    outputs (the §3 invariant extends across buckets)."""
+    g, params = tiny
+    entries = {}
+    for node in g.conv_nodes():
+        entries[record_key(node.conv, 1)] = _tuning("reference", 1)
+        entries[record_key(node.conv, 2)] = _tuning("lax", 2)
+    rec = TuningRecord(entries)
+    from repro.cnn import overlay
+    seen = []
+    real = overlay.apply_conv
+
+    def spy(x, w, *a, **kw):
+        seen.append(kw.get("backend"))
+        return real(x, w, *a, **kw)
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(overlay, "apply_conv", spy)
+        eng = CNNServingEngine(g, params, None, buckets=(1, 2), tuning=rec)
+        reqs = submit_n(eng, 3)
+        assert eng.step() == 2             # traces the bucket-2 executable
+        assert eng.step() == 1             # traces the bucket-1 executable
+    n_conv = len(g.conv_nodes())
+    assert seen[:n_conv] == ["lax"] * n_conv
+    assert seen[n_conv:] == ["reference"] * n_conv
+    for r in reqs:
+        want = forward(g, params, jnp.asarray(r.image))
+        np.testing.assert_allclose(eng.done[r.rid], np.asarray(want),
+                                   rtol=2e-2, atol=2e-3)
+
+
+# ------------------------------------------------------------------ warmup
+def test_warmup_primes_service_estimates(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2, warmup=True)
+    assert all(eng.service_estimate(b) > 0 for b in eng.buckets)
+    assert eng.done == {}                  # warmup results are discarded

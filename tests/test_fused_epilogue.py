@@ -18,8 +18,9 @@ from repro.cnn import overlay
 from repro.cnn.executor import compile_plan, forward, init_params
 from repro.cnn.models import googlenet
 from repro.core.algorithms import IM2COL, KN2ROW, WINO_2_3
-from repro.core.autotune import Binding, LayerTuning, TuningRecord, conv_key
+from repro.core.autotune import Binding, LayerTuning, TuningRecord, record_key
 from repro.core.cost_model import Dataflow
+from repro.core.graph import LayerKind
 from repro.core.mapper import ConvLowering, lower_plan
 from repro.kernels.conv_im2col.ref import conv_ref
 from repro.kernels.gemm.ops import batched_gemm, gemm
@@ -159,7 +160,7 @@ def test_mixed_backend_compiled_plan_matches_reference_oracle(
     entries = {}
     backends = ("pallas", "reference", "lax")
     for i, node in enumerate(g.conv_nodes()):
-        key = conv_key(node.conv)
+        key = record_key(node.conv)
         entries[key] = LayerTuning(
             binding=Binding("im2col", "NS", 128, 128, backends[i % 3]),
             measured_s=0.0, candidates=[])
@@ -173,6 +174,46 @@ def test_mixed_backend_compiled_plan_matches_reference_oracle(
     oracle = compile_plan(g, default_algo=IM2COL)(params, xb)
     np.testing.assert_allclose(np.asarray(mixed), np.asarray(oracle),
                                rtol=2e-2, atol=2e-3)
+
+
+def test_googlenet_bias_relu_lowering_parity(reduced_googlenet):
+    """The ROADMAP conv-bias item: ``init_params`` creates per-conv biases
+    and the GoogleNet lowering fuses them (``epilogue="bias_relu"``); the
+    fused compiled plan must equal the *unfused* bias+relu reference
+    (conv, then bias-add, then ReLU applied outside the overlay)."""
+    g, params0 = reduced_googlenet
+    # init_params created zero biases for every conv
+    for node in g.conv_nodes():
+        b = params0[node.id]["b"]
+        assert b.shape == (node.conv.c_out,)
+        np.testing.assert_array_equal(np.asarray(b), 0)
+    # randomize the biases so the parity check is non-trivial
+    params = {}
+    for nid, p in params0.items():
+        params[nid] = dict(p)
+        if g.nodes[nid].kind is LayerKind.CONV:
+            params[nid]["b"] = rnd(*p["b"].shape)
+    low = lower_plan(g, None, epilogue="bias_relu")
+    assert all(l.epilogue == "bias_relu" for l in low.values())
+
+    def unfused(x, w, *a, stride=1, padding="SAME", epilogue="none",
+                bias=None, **kw):
+        y = conv_ref(x, w, stride=stride, padding=padding)
+        if bias is not None:
+            y = y + bias
+        return jnp.maximum(y, 0) if epilogue.endswith("relu") else y
+
+    xb = rnd(2, 56, 56, 3)
+    fused = compile_plan(g, epilogue="bias_relu")(params, xb)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(overlay, "apply_conv", unfused)
+        ref = forward(g, params, xb, epilogue="bias_relu")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+    # a random bias must actually change the function
+    base = compile_plan(g)(params0, xb)
+    assert not np.allclose(np.asarray(fused), np.asarray(base),
+                           rtol=2e-2, atol=2e-3)
 
 
 # -------------------------------------------------------- avg_pool overlay
