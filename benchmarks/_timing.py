@@ -1,0 +1,31 @@
+"""Shared wall-clock helpers for the benchmark modules."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def sampled_interleaved(fns, reps=7):
+    """Per-rep wall times for each variant, measured round-robin so ambient
+    load drift hits every variant equally instead of biasing whichever ran
+    last. Returns {name: [seconds] * reps}; rep i of every variant runs
+    back-to-back, so cross-variant comparisons can be *paired* per rep
+    (ratios of adjacent measurements cancel machine-phase drift that
+    min-vs-min comparisons do not)."""
+    for fn in fns.values():
+        jax.block_until_ready(fn())   # compile/warm all first
+    samples = {name: [] for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[name].append(time.perf_counter() - t0)
+    return samples
+
+
+def timed_interleaved(fns, reps=7):
+    """min-of-reps per variant over ``sampled_interleaved`` measurements —
+    the standard noise-robust latency estimator."""
+    return {name: min(s)
+            for name, s in sampled_interleaved(fns, reps=reps).items()}

@@ -38,18 +38,10 @@ from repro.core.dse import identify_parameters
 from repro.core.mapper import map_network
 
 
-def _timed_interleaved(fns, reps=7):
-    """min-of-reps per variant, measured round-robin so ambient load drift
-    hits every variant equally instead of biasing whichever ran last."""
-    for fn in fns.values():
-        jax.block_until_ready(fn())   # compile/warm all first
-    best = {name: float("inf") for name in fns}
-    for _ in range(reps):
-        for name, fn in fns.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            best[name] = min(best[name], time.perf_counter() - t0)
-    return best
+try:                                    # package mode (benchmarks.run)
+    from benchmarks._timing import timed_interleaved
+except ImportError:                     # script mode (python benchmarks/x.py)
+    from _timing import timed_interleaved
 
 
 def _e2e_rows(tag: str, g, plan, records, reps: int = 7) -> List[str]:
@@ -65,7 +57,7 @@ def _e2e_rows(tag: str, g, plan, records, reps: int = 7) -> List[str]:
             "fused_tuned": compile_plan(g, plan, tuning=record),
         }
         xb = jax.random.normal(jax.random.PRNGKey(2), (batch,) + tuple(res))
-        secs = _timed_interleaved(
+        secs = timed_interleaved(
             {name: (lambda r=run: r(params, xb)) for name, run in runs.items()},
             reps=reps)
         ms = {name: s * 1e3 for name, s in secs.items()}

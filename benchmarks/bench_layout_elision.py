@@ -1,0 +1,142 @@
+"""Layout-transition elision benchmark (PR 4).
+
+Two compiled variants of the same mapped plan, measured end-to-end over
+the batch bucket ladder on reduced GoogleNet:
+
+* ``roundtrip`` — ``compile_plan(..., elide=False)``: the layout-agnostic
+  lowering every PR before this one executed — each edge materializes
+  NHWC and every conv re-gathers its own input representation;
+* ``elided``    — the layout-aware lowering: consumers whose input layout
+  matches the edge's store format read it directly (im2col chains reuse
+  the Toeplitz buffer, Winograd chains stay in the scattered tile domain,
+  split vertices materialize the chosen format once and fan it out).
+
+Both variants execute the same plan, so outputs must agree (checked) and
+the elided program must be no slower end-to-end (``no_slower``: the
+summed median wall clock of one tick per bucket across the whole ladder,
+within a 10% noise envelope — repeated runs of the *same* program vary
+by more than 5% process-to-process on shared-CPU hosts, so per-bucket
+ratios and tighter margins gate on scheduling luck, not on the change;
+the per-bucket ``speedup_x`` rows use paired per-rep medians and are
+informational). The bench also closes
+the cost-model loop: the Table 2 *predicted* transition saving
+(``mapper.transition_report``) is compared against the *realized*
+wall-clock delta, and their ratio is distilled into a
+``TransitionCalibration`` scale — the measured-calibration hook
+``cost_model.transition_cost`` accepts.
+
+Run standalone (``python benchmarks/bench_layout_elision.py``) or via
+``benchmarks/run.py``; ``--smoke`` runs a tiny graph in seconds for CI.
+"""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.cnn.executor import compile_plan, init_params
+from repro.cnn.models import googlenet, vgg16
+from repro.core.cost_model import TransitionCalibration
+from repro.core.dse import identify_parameters
+from repro.core.mapper import lower_plan, map_network, transition_report
+
+try:                                    # package mode (benchmarks.run)
+    from benchmarks._timing import sampled_interleaved
+except ImportError:                     # script mode (python benchmarks/x.py)
+    from _timing import sampled_interleaved
+
+
+def run(smoke: bool = False) -> List[str]:
+    if smoke:
+        tag, g = "vgg16_r8_smoke", vgg16(res=8, scale=0.05)
+        batches, reps, plan = (1, 2), 3, None
+    else:
+        tag, g = "googlenet_r56", googlenet(res=56, scale=0.25)
+        batches, reps = (1, 2, 4, 8), 13
+        hw = identify_parameters(g, max_dim=512)
+        plan = map_network(g, hw=hw)
+    params = init_params(g, jax.random.PRNGKey(0))
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+
+    lowered = lower_plan(g, plan)
+    rows = [
+        f"layout_elision,{tag},config,transition_edges,"
+        f"{len(lowered.transitions)}",
+        f"layout_elision,{tag},config,elided_edges,"
+        f"{len(lowered.elided_edges)}",
+    ]
+
+    runs = {
+        "elided": compile_plan(g, plan),
+        "roundtrip": compile_plan(g, plan, elide=False),
+    }
+    ok = True
+    med = {name: {} for name in runs}
+    for batch in batches:
+        xb = jax.random.normal(jax.random.PRNGKey(2), (batch,) + shape)
+        out = {name: np.asarray(r(params, xb)) for name, r in runs.items()}
+        ok &= bool(np.allclose(out["elided"], out["roundtrip"],
+                               rtol=1e-4, atol=1e-5))
+        samples = sampled_interleaved(
+            {name: (lambda r=r, x=xb: r(params, x))
+             for name, r in runs.items()}, reps=reps)
+        ms = {name: min(s) * 1e3 for name, s in samples.items()}
+        for name, s in samples.items():
+            med[name][batch] = float(np.median(s))
+        # Paired per-rep comparison: each rep measures both variants
+        # back-to-back, so the median of per-rep ratios cancels
+        # machine-phase drift a min-vs-min comparison is hostage to.
+        speedup = float(np.median(
+            [rt / el for rt, el in
+             zip(samples["roundtrip"], samples["elided"])]))
+        pre = f"layout_elision,{tag},b{batch}"
+        rows.append(f"{pre},elided_ms,{ms['elided']:.2f}")
+        rows.append(f"{pre},roundtrip_ms,{ms['roundtrip']:.2f}")
+        rows.append(f"{pre},speedup_x,{speedup:.3f}")
+
+    # The gate sums the whole bucket ladder (one tick per bucket, as the
+    # serving engine would dispatch them) and allows a 10% envelope:
+    # repeated runs of the SAME variant differ by >5% process-to-process
+    # on shared-CPU hosts (XLA CPU re-schedules per compile), so the
+    # aggregate-within-envelope gate asserts what is actually measurable
+    # here — the elided program is not meaningfully slower — while the
+    # per-bucket rows publish the raw picture.
+    el_total = sum(med["elided"].values())
+    rt_total = sum(med["roundtrip"].values())
+    no_slower = el_total <= rt_total * 1.10
+
+    # Predicted (Table 2) vs realized transition savings → calibration.
+    # Realized is normalized per image over the ladder (Σ median deltas /
+    # Σ batch sizes); predicted prices one image's transitions. A realized
+    # delta at or below zero (within the noise envelope, or XLA fused the
+    # conversions away) clamps the scale to 0 — a calibration is a cost
+    # multiplier and can never be negative.
+    rep = transition_report(g, lowered)
+    predicted_s = rep["predicted_saving_s"]
+    realized_s = (rt_total - el_total) / sum(batches)
+    scale = max(realized_s / predicted_s, 0.0) if predicted_s > 0 else 0.0
+    cal = TransitionCalibration(default=scale)
+    rep_cal = transition_report(g, lowered, calibration=cal)
+    pre = f"layout_elision,{tag},summary"
+    rows.append(f"{pre},elided_ladder_ms,{el_total * 1e3:.2f}")
+    rows.append(f"{pre},roundtrip_ladder_ms,{rt_total * 1e3:.2f}")
+    rows.append(f"{pre},predicted_saving_us,{predicted_s * 1e6:.3f}")
+    rows.append(f"{pre},realized_saving_us,{realized_s * 1e6:.1f}")
+    rows.append(f"{pre},calibration_scale,{scale:.1f}")
+    rows.append(f"{pre},calibrated_saving_us,"
+                f"{rep_cal['predicted_saving_s'] * 1e6:.1f}")
+    rows.append(f"{pre},outputs_ok,{ok}")
+    rows.append(f"{pre},no_slower,{no_slower}")
+    return rows
+
+
+if __name__ == "__main__":
+    out = run(smoke="--smoke" in sys.argv)
+    print("\n".join(out))
+    # Correctness gates the smoke job; the no_slower perf summary is too
+    # noisy to assert on the tiny smoke graph and is only enforced for the
+    # committed full-run rows (see the CI schema guard).
+    if any(row.endswith("outputs_ok,False") for row in out):
+        sys.exit(1)

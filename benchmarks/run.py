@@ -20,6 +20,7 @@ def main() -> None:
     import benchmarks.bench_dynamic_batching as bdb
     import benchmarks.bench_e2e as be
     import benchmarks.bench_fused_autotune as bf
+    import benchmarks.bench_layout_elision as bl
     import benchmarks.bench_roofline as br
     import benchmarks.bench_utilization as bu
 
@@ -27,6 +28,7 @@ def main() -> None:
     for name, mod in (("bench_algorithms", ba), ("bench_utilization", bu),
                       ("bench_dse", bd), ("bench_e2e", be),
                       ("bench_fused_autotune", bf),
+                      ("bench_layout_elision", bl),
                       ("bench_dynamic_batching", bdb),
                       ("bench_roofline", br)):
         t0 = time.time()

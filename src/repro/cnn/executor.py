@@ -21,7 +21,7 @@ Two execution modes:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,9 +30,41 @@ from repro.cnn import layers as L
 from repro.cnn import overlay
 from repro.core.algorithms import Algorithm, IM2COL
 from repro.core.graph import Graph, LayerKind
-from repro.core.mapper import ConvLowering, ExecutionPlan, lower_plan
+from repro.core.layouts import LayoutSpec, is_nhwc
+from repro.core.mapper import (ConvLowering, ExecutionPlan, LoweredProgram,
+                               lower_plan)
+from repro.kernels.layouts import materialize, restore
 
 Params = Dict[int, Dict[str, jax.Array]]
+Lowering = Union[LoweredProgram, Dict[int, ConvLowering]]
+
+
+class _Staged:
+    """One node's output as staged for its consumers: the value in the
+    edge's store format plus a lazily-restored NHWC view (computed at most
+    once per producer, shared by every mismatched consumer — the split
+    vertex materializes ONE format and fans it out)."""
+
+    __slots__ = ("value", "spec", "_nhwc")
+
+    def __init__(self, value: jax.Array,
+                 spec: Optional[LayoutSpec] = None) -> None:
+        self.value = value
+        self.spec = None if is_nhwc(spec) else spec
+        self._nhwc = value if self.spec is None else None
+
+    def nhwc(self) -> jax.Array:
+        if self._nhwc is None:
+            self._nhwc = restore(self.value, self.spec)   # converting load
+        return self._nhwc
+
+    def in_layout(self, spec: Optional[LayoutSpec]) -> jax.Array:
+        """The value as a consumer's ``in_layout`` expects it."""
+        if is_nhwc(spec):
+            return self.nhwc()
+        if self.spec == spec:
+            return self.value                             # matched load
+        return materialize(self.nhwc(), spec)
 
 
 def init_params(graph: Graph, key: jax.Array,
@@ -64,22 +96,36 @@ def init_params(graph: Graph, key: jax.Array,
     return params
 
 
-def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
+def _eval_graph(graph: Graph, lowering: Lowering,
                 params: Params, x: jax.Array,
                 use_pallas: bool, interpret: Optional[bool],
                 avg_pool_via: str = "jnp") -> jax.Array:
     """Walk the graph once; with ``x`` a tracer this IS the trace that
     ``compile_plan`` stages out — all dict lookups and dispatch below happen
-    at trace time only."""
+    at trace time only.
+
+    Inter-layer values travel in the store formats the ``LoweredProgram``
+    realized from ``plan.store_formats``: a producer stages its edge's
+    format once (conv layers fuse the conversion via ``out_layout``,
+    non-conv producers materialize it here), matched consumers read it
+    directly (``in_layout``), and mismatched consumers restore to NHWC —
+    the Table 2 converting load. A plain ``{nid: ConvLowering}`` dict (no
+    transitions) reproduces the layout-agnostic walk."""
     batched = x.ndim == 4
-    values: Dict[int, jax.Array] = {}
+    store_specs: Dict[int, LayoutSpec] = getattr(lowering, "store_specs", {})
+    values: Dict[int, _Staged] = {}
+
+    def _stage(nid: int, y: jax.Array) -> None:
+        """Stage a non-conv producer's NHWC output in its edge's format."""
+        spec = store_specs.get(nid)
+        values[nid] = _Staged(materialize(y, spec), spec)
+
     for nid in graph.topo_order():
         node = graph.nodes[nid]
         preds = graph.predecessors(nid)
         if node.kind is LayerKind.INPUT:
-            values[nid] = x
+            _stage(nid, x)
             continue
-        ins = [values[p] for p in preds]
         if node.kind is LayerKind.CONV:
             low = lowering[nid]
             m = node.conv
@@ -90,47 +136,63 @@ def _eval_graph(graph: Graph, lowering: Dict[int, ConvLowering],
                 # Bias-free legacy params under a bias-carrying lowering:
                 # degrade to the bias-less epilogue (conv math unchanged).
                 epi = "relu" if epi.endswith("relu") else "none"
-            y = overlay.apply_conv(ins[0], params[nid]["w"], low.algo,
+            in_layout = getattr(low, "in_layout", None)
+            out_layout = getattr(low, "out_layout", None)
+            xin = values[preds[0]].in_layout(in_layout)
+            y = overlay.apply_conv(xin, params[nid]["w"], low.algo,
                                    low.dataflow, low.p1, low.p2,
                                    stride=m.stride, padding=pad,
                                    use_pallas=use_pallas,
                                    backend=(None if low.backend == "auto"
                                             else low.backend),
                                    interpret=interpret,
-                                   epilogue=epi, bias=bias)
-            # The graph semantics are CONV→ReLU; a relu-carrying epilogue
-            # already ran it inside the overlay call — ONE call, fused.
-            values[nid] = y if epi.endswith("relu") else L.relu(y)
-        elif node.kind is LayerKind.POOL_MAX:
+                                   epilogue=epi, bias=bias,
+                                   in_layout=in_layout,
+                                   out_layout=out_layout)
+            if not epi.endswith("relu"):
+                # The graph semantics are CONV→ReLU; a relu-carrying
+                # epilogue already ran it inside the overlay call — ONE
+                # call, fused. ReLU commutes with the (linear-gather)
+                # store formats, so an unfused ReLU applies to the staged
+                # value directly.
+                y = L.relu(y)
+            values[nid] = _Staged(y, out_layout)
+            continue
+        # Non-conv consumers read the 3-D tensor; restored here only when
+        # a predecessor staged a non-NHWC format (the converting load) —
+        # conv consumers above never touch this view.
+        ins = [values[p].nhwc() for p in preds]
+        if node.kind is LayerKind.POOL_MAX:
             pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
-            values[nid] = L.max_pool(ins[0], int(node.attrs["k"]),
-                                     int(node.attrs["stride"]), pad)
+            y = L.max_pool(ins[0], int(node.attrs["k"]),
+                           int(node.attrs["stride"]), pad)
         elif node.kind is LayerKind.POOL_AVG:
             pad = "SAME" if node.attrs.get("pad", "same") == "same" else "VALID"
-            values[nid] = L.avg_pool(ins[0], int(node.attrs["k"]),
-                                     int(node.attrs["stride"]), pad,
-                                     via=avg_pool_via,
-                                     use_pallas=use_pallas,
-                                     interpret=interpret)
+            y = L.avg_pool(ins[0], int(node.attrs["k"]),
+                           int(node.attrs["stride"]), pad,
+                           via=avg_pool_via,
+                           use_pallas=use_pallas,
+                           interpret=interpret)
         elif node.kind is LayerKind.CONCAT:
-            values[nid] = jnp.concatenate(ins, axis=-1)
+            y = jnp.concatenate(ins, axis=-1)
         elif node.kind is LayerKind.ADD:
-            values[nid] = L.relu(sum(ins))
+            y = L.relu(sum(ins))
         elif node.kind is LayerKind.GLOBAL_POOL:
             gap = L.global_avg_pool(ins[0])          # (C,) or (B, C)
-            values[nid] = (gap[:, None, None, :] if batched
-                           else gap[None, None, :])
+            y = (gap[:, None, None, :] if batched
+                 else gap[None, None, :])
         elif node.kind is LayerKind.FC:
             flat = (ins[0].reshape(ins[0].shape[0], -1) if batched
                     else ins[0].reshape(-1))
-            values[nid] = L.fc(flat, params[nid]["w"], params[nid]["b"])
+            y = L.fc(flat, params[nid]["w"], params[nid]["b"])
         elif node.kind is LayerKind.SOFTMAX:
-            values[nid] = jax.nn.softmax(ins[0])
+            y = jax.nn.softmax(ins[0])
         elif node.kind is LayerKind.OUTPUT:
-            values[nid] = ins[0]
+            y = ins[0]
         else:
             raise ValueError(f"unhandled node kind {node.kind}")
-    return values[graph.sink()]
+        _stage(nid, y)
+    return values[graph.sink()].nhwc()
 
 
 def forward(graph: Graph, params: Params,
@@ -140,13 +202,17 @@ def forward(graph: Graph, params: Params,
             interpret: Optional[bool] = None,
             epilogue: str = "relu",
             tuning=None,
-            tuning_batch: Optional[int] = None) -> jax.Array:
+            tuning_batch: Optional[int] = None,
+            elide: bool = True,
+            elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None
+            ) -> jax.Array:
     """Eager inference. ``x``: (H, W, C) single image (the paper's no-batch
     low-latency setting) or (B, H, W, C) batch. Each call re-interprets the
     plan in Python — use ``compile_plan`` for the dispatch-free hot path."""
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
-                          batch=tuning_batch)
+                          batch=tuning_batch, elide=elide,
+                          elide_overrides=elide_overrides)
     return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
 
 
@@ -157,18 +223,26 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  epilogue: str = "relu",
                  tuning=None,
                  tuning_batch: Optional[int] = None,
-                 avg_pool_via: str = "jnp"
+                 avg_pool_via: str = "jnp",
+                 elide: bool = True,
+                 elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
     Returns ``run(params, x) -> logits`` with ``x``: (H, W, C) or
-    (B, H, W, C). The graph topology and every per-layer algorithm and
-    dataflow/(p1, p2) block binding are resolved *now* into a static
-    ``ConvLowering`` spec and closed over, so the traced program contains
-    no Python dispatch; XLA sees the whole network and can fuse across
-    layers. (``plan.store_formats`` stays cost-model-only for now — see
-    ROADMAP.) One compilation is cached per input shape/dtype (batch sizes
-    compile once each — pad to a fixed batch to avoid recompilation, as
+    (B, H, W, C). The graph topology, every per-layer algorithm and
+    dataflow/(p1, p2) block binding, AND every edge's DRAM store format
+    (``plan.store_formats``, realized as ``LayoutTransition`` specs) are
+    resolved *now* into a static ``LoweredProgram`` and closed over, so the
+    traced program contains no Python dispatch; XLA sees the whole network
+    and can fuse across layers. With ``elide=True`` (default) consumers
+    read matching store formats directly — back-to-back Winograd layers
+    stay in the scattered tile domain, im2col chains reuse the Toeplitz
+    buffer — and the NHWC round trip survives only where layouts disagree;
+    ``elide=False`` compiles the layout-agnostic always-round-trip baseline
+    (kept for benchmarking); ``elide_overrides`` flips individual edges.
+    One compilation is cached per input shape/dtype (batch sizes compile
+    once each — pad to a fixed batch to avoid recompilation, as
     ``CNNServingEngine`` does).
 
     ``epilogue="relu"`` (the default) fuses each CONV's trailing ReLU into
@@ -185,7 +259,8 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     """
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
-                          batch=tuning_batch)
+                          batch=tuning_batch, elide=elide,
+                          elide_overrides=elide_overrides)
 
     @jax.jit
     def run(params: Params, x: jax.Array) -> jax.Array:

@@ -3,9 +3,9 @@ from repro.core.algorithms import (Algorithm, AlgoFamily, DEFAULT_MENU,
                                    IM2COL, KN2ROW, Layout, PAPER_MENU,
                                    WINO_2_3, WINO_4_3, menu_for)
 from repro.core.cost_model import (ALL_DATAFLOWS, Dataflow, NodeCost,
-                                   Roofline, TPUSpec, V5E, V5E_INT8,
-                                   best_dataflow, eff_bandwidth,
-                                   fits_on_chip, gemm_steps,
+                                   Roofline, TPUSpec, TransitionCalibration,
+                                   V5E, V5E_INT8, best_dataflow,
+                                   eff_bandwidth, fits_on_chip, gemm_steps,
                                    gemm_utilization, node_cost, roofline,
                                    transition_cost)
 from repro.core.dse import (HardwareChoice, candidate_shapes,
@@ -14,10 +14,14 @@ from repro.core.graph import (ConvMeta, Graph, LayerKind, LayerNode,
                               is_series_parallel)
 from repro.core.autotune import (Binding, LayerTuning, TuningRecord,
                                  autotune_graph, benchmark_binding,
-                                 candidate_bindings, conv_key, tune_layer)
+                                 candidate_bindings, conv_key,
+                                 elision_overrides_from_meta, tune_elision,
+                                 tune_layer)
+from repro.core.layouts import LayoutSpec, consumer_spec, invertible
 from repro.core.mapper import (ConvLowering, CostGraphBuilder,
-                               ExecutionPlan, evaluate_fixed_mapping,
-                               lower_plan, map_network)
+                               ExecutionPlan, LayoutTransition,
+                               LoweredProgram, evaluate_fixed_mapping,
+                               lower_plan, map_network, transition_report)
 from repro.core.pbqp import (PBQP, SolveResult, solve_brute_force,
                              solve_greedy_incremental, solve_greedy_node,
                              solve_series_parallel)

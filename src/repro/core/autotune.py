@@ -405,6 +405,80 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
     return record
 
 
+def tune_elision(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
+                 params=None, batch: Optional[int] = None,
+                 default_algo: Optional[Algorithm] = None,
+                 epilogue: str = "relu",
+                 tuning: Optional[TuningRecord] = None,
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None,
+                 reps: int = 3, min_improvement: float = 0.05,
+                 record: Optional[TuningRecord] = None,
+                 verbose: bool = False
+                 ) -> Dict[Tuple[int, int], bool]:
+    """Measure per-edge layout-transition elision on this device.
+
+    The lowering elides every transition the plan's store formats allow;
+    this closes the measurement loop the same way ``tune_layer`` does for
+    bindings: starting from the all-elided compiled plan, each elided edge
+    is re-compiled with its transition forced back to the NHWC round trip,
+    and the override is kept only when it beats the all-elided baseline by
+    ``min_improvement`` (hysteresis — elision toggles are never flipped on
+    noise). Returns the ``elide_overrides`` dict for
+    ``lower_plan``/``compile_plan``; with a ``record``, the overrides are
+    also stored under ``record.meta["elision_overrides"]`` (JSON-safe
+    ``[[src, dst, flag], ...]``).
+    """
+    from repro.cnn.executor import compile_plan, init_params  # deferred
+    from repro.core.algorithms import IM2COL
+    from repro.core.mapper import lower_plan
+
+    default_algo = IM2COL if default_algo is None else default_algo
+    if params is None:
+        params = init_params(graph, jax.random.PRNGKey(0))
+    shape = tuple(graph.nodes[graph.source()].attrs["out_shape"])
+    if batch is not None:
+        shape = (batch,) + shape
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+
+    def measure(overrides: Optional[Dict[Tuple[int, int], bool]]) -> float:
+        run = compile_plan(graph, plan, default_algo=default_algo,
+                           use_pallas=use_pallas, interpret=interpret,
+                           epilogue=epilogue, tuning=tuning,
+                           tuning_batch=batch, elide_overrides=overrides)
+        jax.block_until_ready(run(params, x))       # compile + warm
+        best = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(params, x))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    lowered = lower_plan(graph, plan, default_algo, epilogue=epilogue,
+                         tuning=tuning, batch=batch)
+    base_s = measure(None)
+    overrides: Dict[Tuple[int, int], bool] = {}
+    for edge in lowered.elided_edges:
+        s = measure({edge: False})
+        if s < base_s * (1 - min_improvement):
+            overrides[edge] = False
+        if verbose:
+            kept = "round-trip" if overrides.get(edge) is False else "elided"
+            print(f"tune_elision {edge}: {s * 1e6:.0f}us vs "
+                  f"{base_s * 1e6:.0f}us elided → {kept}")
+    if record is not None:
+        record.meta["elision_overrides"] = \
+            [[src, dst, flag] for (src, dst), flag in sorted(overrides.items())]
+    return overrides
+
+
+def elision_overrides_from_meta(record: TuningRecord
+                                ) -> Dict[Tuple[int, int], bool]:
+    """Inverse of the ``tune_elision(record=...)`` meta stash."""
+    raw = record.meta.get("elision_overrides", [])
+    return {(int(src), int(dst)): bool(flag) for src, dst, flag in raw}
+
+
 def autotune_buckets(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
                      buckets: Sequence[int] = (1, 2, 4, 8),
                      record: Optional[TuningRecord] = None,

@@ -308,15 +308,41 @@ def _store_bytes(src: Algorithm, dst: Algorithm, nxt: ConvMeta,
     return bytes_, eff_bandwidth(spec, c_out_prev)
 
 
+@dataclasses.dataclass
+class TransitionCalibration:
+    """Measured-vs-predicted scale factors for Table 2 transitions.
+
+    The analytical model prices a transition from layout bytes and
+    bandwidth; on the machine actually executing the program the realized
+    cost can differ (XLA fuses the conversion gather, caches absorb the
+    round trip). Benchmarks that measure elided-vs-round-trip wall clock
+    (``benchmarks/bench_layout_elision.py``) distill the ratio into scale
+    factors keyed by (source layout, destination layout) — ``scale`` > 1
+    means transitions cost more than modeled, < 1 less — and pass the
+    calibration back into ``transition_cost`` so predicted savings can be
+    reported in realized terms.
+    """
+    scales: Dict[Tuple[Layout, Layout], float] = \
+        dataclasses.field(default_factory=dict)
+    default: float = 1.0
+
+    def scale(self, src: Layout, dst: Layout) -> float:
+        return self.scales.get((src, dst), self.default)
+
+
 def transition_cost(src: Algorithm, dst: Algorithm, nxt: ConvMeta,
                     c_out_prev: int, spec: TPUSpec = V5E,
                     implicit_im2col: bool = False,
                     extra_s: float = 0.0,
-                    on_chip: bool = False) -> float:
+                    on_chip: bool = False,
+                    calibration: Optional[TransitionCalibration] = None
+                    ) -> float:
     """Table 2 store + load legs in seconds (+ pooling etc. via extra_s).
 
     ``on_chip=True`` models flow step ⑤: consecutive layers whose combined
     footprint fits in VMEM skip the HBM round trip entirely.
+    ``calibration`` rescales the modeled cost by the measured factor for
+    this (source layout, destination layout) pair.
     """
     if on_chip:
         return extra_s
@@ -325,7 +351,10 @@ def transition_cost(src: Algorithm, dst: Algorithm, nxt: ConvMeta,
     # Load leg is symmetric (§3.3: "the DLT at data-load side performs
     # symmetric operations"): same byte count back in at full/effective BW.
     load_bytes, load_bw = store_bytes, store_bw
-    return store_bytes / store_bw + load_bytes / load_bw + extra_s
+    cost = store_bytes / store_bw + load_bytes / load_bw
+    if calibration is not None:
+        cost *= calibration.scale(src.output_layout, dst.input_layout)
+    return cost + extra_s
 
 
 def fits_on_chip(prev_out_elems: int, next_in_elems: int,

@@ -27,17 +27,24 @@ if TYPE_CHECKING:  # pragma: no cover — autotune imports mapper at runtime
 
 from repro.core.algorithms import (Algorithm, AlgoFamily, DEFAULT_MENU,
                                    IM2COL, KN2ROW, Layout, menu_for)
-from repro.core.cost_model import (Dataflow, TPUSpec, V5E, best_dataflow,
-                                   eff_bandwidth, fits_on_chip, gemm_steps,
-                                   node_cost, transition_cost)
+from repro.core.cost_model import (Dataflow, TPUSpec, TransitionCalibration,
+                                   V5E, best_dataflow, eff_bandwidth,
+                                   fits_on_chip, gemm_steps, node_cost,
+                                   transition_cost)
 from repro.core.dse import HardwareChoice, identify_parameters
 from repro.core.graph import ConvMeta, Graph, LayerKind, LayerNode
+from repro.core.layouts import LayoutSpec, NHWC, consumer_spec
 from repro.core.pbqp import (PBQP, SolveResult, solve_brute_force,
                              solve_greedy_incremental, solve_greedy_node,
                              solve_series_parallel)
 
 
 PASSTHROUGH = "passthrough"
+
+# Lowering-time validation sets: fail loudly in ``lower_plan`` instead of
+# obscurely at trace time inside a kernel.
+EPILOGUES = ("none", "relu", "bias", "bias_relu")
+BACKENDS = ("auto", "pallas", "reference", "lax")
 
 
 @dataclasses.dataclass
@@ -72,6 +79,9 @@ class ConvLowering:
     ``backend`` the layer runs on ("auto" follows the executor-wide
     use_pallas flag; "pallas"/"reference"/"lax" pin it, letting one
     compiled plan mix tiny-conv jnp/lax layers with big Pallas GEMMs).
+    ``in_layout``/``out_layout`` (None = NHWC) realize the plan's DRAM
+    store formats: the layer consumes its predecessor's stored format
+    directly / emits its consumer's store format (§3.3, Table 2).
     Hashable, so a (graph, lowering) pair keys one jit-compiled program."""
     algo: Algorithm
     dataflow: Dataflow
@@ -79,6 +89,205 @@ class ConvLowering:
     p2: int
     epilogue: str = "relu"
     backend: str = "auto"
+    in_layout: Optional[LayoutSpec] = None
+    out_layout: Optional[LayoutSpec] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutTransition:
+    """The realized store format of one graph edge.
+
+    ``layout`` is the DRAM representation the producer stores (NHWC unless
+    a non-trivial format was chosen); ``elide=True`` means the consumer
+    reads that format *directly* (the matched streaming load of Table 2 —
+    no NHWC round trip); ``elide=False`` with a non-NHWC layout is the
+    converting load (a mismatched sibling at a split); ``reason`` records
+    why an edge kept the round trip."""
+    src: int
+    dst: int
+    layout: LayoutSpec
+    elide: bool
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class LoweredProgram:
+    """What ``lower_plan`` hands the executor: per-conv bindings plus the
+    per-edge layout transitions derived from ``plan.store_formats``.
+
+    ``convs`` maps conv node → ConvLowering; ``transitions`` maps every
+    graph edge → LayoutTransition; ``store_specs`` maps producer node →
+    the non-NHWC format it stages (split vertices materialize it ONCE and
+    fan it out; the executor materializes it for non-conv producers, conv
+    producers fuse it via ``ConvLowering.out_layout``). Behaves as a
+    mapping over ``convs`` so pre-layout call sites (``lowering[nid]``,
+    ``.values()``) keep working.
+    """
+    convs: Dict[int, ConvLowering]
+    transitions: Dict[Tuple[int, int], LayoutTransition] = \
+        dataclasses.field(default_factory=dict)
+    store_specs: Dict[int, LayoutSpec] = dataclasses.field(default_factory=dict)
+
+    # -------------------------------------------------- mapping protocol
+    def __getitem__(self, nid: int) -> ConvLowering:
+        return self.convs[nid]
+
+    def __contains__(self, nid: int) -> bool:
+        return nid in self.convs
+
+    def __iter__(self):
+        return iter(self.convs)
+
+    def __len__(self) -> int:
+        return len(self.convs)
+
+    def get(self, nid: int, default=None):
+        return self.convs.get(nid, default)
+
+    def keys(self):
+        return self.convs.keys()
+
+    def values(self):
+        return self.convs.values()
+
+    def items(self):
+        return self.convs.items()
+
+    # ------------------------------------------------------ observability
+    @property
+    def elided_edges(self) -> List[Tuple[int, int]]:
+        """Edges whose consumer reads a non-NHWC store format directly —
+        the transitions the compiled program skips."""
+        return sorted((t.src, t.dst) for t in self.transitions.values()
+                      if t.elide and t.layout.kind != "nhwc")
+
+
+def _validate_lowering(graph: Graph, epilogue: str, backend: str,
+                       elide_overrides) -> None:
+    if epilogue not in EPILOGUES:
+        raise ValueError(f"unknown epilogue {epilogue!r}; want one of "
+                         f"{EPILOGUES}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of "
+                         f"{BACKENDS}")
+    if elide_overrides is None:
+        return
+    edges = set(graph.edges)
+    for edge, flag in elide_overrides.items():
+        if not (isinstance(edge, tuple) and len(edge) == 2
+                and edge in edges):
+            raise ValueError(f"elide_overrides key {edge!r} is not an edge "
+                             "of the graph")
+        if not isinstance(flag, bool):
+            raise ValueError(f"elide_overrides[{edge}] must be bool, "
+                             f"got {flag!r}")
+
+
+def _most_common_spec(specs: List[LayoutSpec]) -> Optional[LayoutSpec]:
+    """Majority vote with first-seen tie-breaking (deterministic)."""
+    counts: Dict[LayoutSpec, int] = {}
+    for s in specs:
+        counts[s] = counts.get(s, 0) + 1
+    best = None
+    for s in specs:                      # first-seen order
+        if best is None or counts[s] > counts[best]:
+            best = s
+    return best
+
+
+def _consumer_want(graph: Graph, base: Dict[int, ConvLowering],
+                   v: int) -> Tuple[Optional[LayoutSpec], str]:
+    """The store format consumer ``v`` reads directly, or (None, why)."""
+    node = graph.nodes[v]
+    if node.kind is not LayerKind.CONV:
+        return NHWC, ""
+    low = base[v]
+    if low.backend == "lax":
+        return None, "lax backend consumes NHWC"
+    spec = consumer_spec(low.algo, node.conv)
+    if spec is None:
+        return None, f"{low.algo.key} has no directly-consumable format here"
+    return spec, ""
+
+
+def _thread_layouts(graph: Graph, plan: Optional[ExecutionPlan],
+                    base: Dict[int, ConvLowering], elide: bool,
+                    overrides: Dict[Tuple[int, int], bool]
+                    ) -> LoweredProgram:
+    """Derive per-edge LayoutTransitions and attach in/out layouts.
+
+    Chain edges store the consumer's own input layout (the Table 2 edge
+    cost already prices exactly that store); split producers store ONE
+    format — the PBQP's ``plan.store_formats`` pick when available,
+    restricted to the fan-out's matching consumers — and siblings that
+    want something else pay a converting load (``kernels.layouts.restore``).
+    """
+    transitions: Dict[Tuple[int, int], LayoutTransition] = {}
+    store_specs: Dict[int, LayoutSpec] = {}
+    in_layouts: Dict[int, LayoutSpec] = {}
+    for u in graph.topo_order():
+        succs = sorted(graph.successors(u))
+        if not succs:
+            continue
+        # What each consumer *could* read directly — overrides do not
+        # enter this vote, so disabling one edge never reshuffles its
+        # siblings' transitions (a per-edge toggle measures that edge and
+        # only that edge).
+        wants = {v: _consumer_want(graph, base, v) for v in succs}
+        if graph.nodes[u].kind is LayerKind.INPUT:
+            # The network input arrives in NHWC from outside (the serving
+            # engine's staging buffer, the client): there is no producer
+            # layer to store a format, and the cost graph prices the input
+            # vertex as a 3-D-tensor producer — the first layer always
+            # pays its own load-side conversion. (NHWC-consuming layers
+            # still match trivially.)
+            wants = {v: ((s, why) if s is not None and s.kind == "nhwc"
+                         else (None, "network input arrives in NHWC"))
+                     for v, (s, why) in wants.items()}
+        candidates = [] if not elide else \
+            [s for (s, _) in wants.values()
+             if s is not None and s.kind != "nhwc"]
+        if plan is not None and len(succs) > 1 and u in plan.store_formats:
+            # Honor the PBQP's store-format split vertex: only formats of
+            # the chosen DRAM layout may be materialized on this fan-out.
+            chosen = plan.store_formats[u]
+            candidates = ([] if chosen is Layout.TENSOR3D else
+                          [s for s in candidates if s.layout is chosen])
+        store = _most_common_spec(candidates)
+        if (store is not None and len(succs) == 1
+                and overrides.get((u, succs[0])) is False):
+            # A chain edge's store exists only for its one consumer: the
+            # override restores the true NHWC baseline (no materialization
+            # at all), not a round trip through the format.
+            store = None
+        for v in succs:
+            want, why = wants[v]
+            if not elide:
+                want, why = None, "elision disabled"
+            elif overrides.get((u, v)) is False:
+                want, why = None, "disabled by per-edge override"
+            if want is not None and store is not None and want == store:
+                transitions[(u, v)] = LayoutTransition(u, v, store, True)
+                in_layouts[v] = store
+            elif want is not None and want.kind == "nhwc" and store is None:
+                # kn2row / non-conv consumers: the 3-D tensor IS their
+                # input layout — matched without any conversion.
+                transitions[(u, v)] = LayoutTransition(u, v, NHWC, True)
+            else:
+                if not why:
+                    why = ("converting load (store format mismatch)"
+                           if store is not None
+                           else "store format stays NHWC")
+                transitions[(u, v)] = LayoutTransition(
+                    u, v, store if store is not None else NHWC, False, why)
+        if store is not None:
+            store_specs[u] = store
+    convs = {
+        nid: dataclasses.replace(low, in_layout=in_layouts.get(nid),
+                                 out_layout=store_specs.get(nid))
+        for nid, low in base.items()
+    }
+    return LoweredProgram(convs, transitions, store_specs)
 
 
 def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
@@ -86,8 +295,10 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                epilogue: str = "relu",
                backend: str = "auto",
                tuning: Optional["TuningRecord"] = None,
-               batch: Optional[int] = None
-               ) -> Dict[int, ConvLowering]:
+               batch: Optional[int] = None,
+               elide: bool = True,
+               elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None
+               ) -> LoweredProgram:
     """Lower an ExecutionPlan to the static spec consumed at trace time.
 
     With ``plan=None`` every conv gets ``default_algo`` under the NS
@@ -101,8 +312,19 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
     not rank identically across batch sizes, so a bucketed serving engine
     lowers one spec per bucket. Layers without a record entry keep the
     model-predicted binding.
+
+    The returned ``LoweredProgram`` also carries the realized store format
+    of every edge: with ``elide=True`` (default) consumers read matching
+    store formats directly and the NHWC round trip survives only where
+    producer/consumer layouts disagree; ``elide=False`` lowers the
+    layout-agnostic always-round-trip program (the pre-layout baseline,
+    kept for benchmarking); ``elide_overrides`` flips individual edges
+    (``{(src, dst): False}``), letting the autotuner measure elision
+    per edge. Unknown epilogue/backend strings and malformed overrides are
+    rejected here, not at trace time.
     """
-    out: Dict[int, ConvLowering] = {}
+    _validate_lowering(graph, epilogue, backend, elide_overrides)
+    base: Dict[int, ConvLowering] = {}
     for node in graph.conv_nodes():
         nid = node.id
         if plan is None:
@@ -116,11 +338,15 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
         if tuning is not None:
             tuned = tuning.lowering_for(node.conv, batch=batch)
             if tuned is not None:
+                if tuned.backend not in BACKENDS:
+                    raise ValueError(
+                        f"tuning record binds conv {nid} to unknown "
+                        f"backend {tuned.backend!r}; want one of {BACKENDS}")
                 low = dataclasses.replace(
                     low, algo=tuned.algo, dataflow=tuned.dataflow,
                     p1=tuned.p1, p2=tuned.p2, backend=tuned.backend)
-        out[nid] = low
-    return out
+        base[nid] = low
+    return _thread_layouts(graph, plan, base, elide, elide_overrides or {})
 
 
 def _layer_out(node: LayerNode) -> Tuple[int, int, int]:
@@ -171,6 +397,10 @@ class CostGraphBuilder:
         self.use_on_chip = use_on_chip
         self.choices: Dict[int, NodeChoices] = {}
         self.split_formats: Dict[int, List[Algorithm]] = {}
+        # Virtual store-format vertex id → the producer it splits, so the
+        # solved plan can key store_formats by *producer* (what the
+        # lowering pipeline needs to materialize the format).
+        self.split_producer: Dict[int, int] = {}
         self._next_virtual_id = max(graph.nodes) + 1 if graph.nodes else 0
 
     # ------------------------------------------------------------- choices
@@ -293,6 +523,7 @@ class CostGraphBuilder:
                         if g.nodes[s].conv is not None), None)
             vs = self._next_virtual_id
             self._next_virtual_id += 1
+            self.split_producer[vs] = nid
             vs_ch = NodeChoices(vs, LayerKind.CONCAT, formats,
                                 [f"store:{a.input_layout.value}" for a in formats],
                                 np.zeros(len(formats)),
@@ -312,6 +543,52 @@ def _algos_or_default(ch: NodeChoices) -> List[Algorithm]:
     """Passthrough vertices behave as 3-D-tensor producers/consumers, which
     is exactly kn2row's layout (§3.3)."""
     return ch.algos if ch.algos else [KN2ROW]
+
+
+def transition_report(graph: Graph, lowered: LoweredProgram,
+                      spec: TPUSpec = V5E,
+                      calibration: Optional[TransitionCalibration] = None
+                      ) -> Dict[str, object]:
+    """Predicted Table 2 cost of the lowered program's elided transitions
+    vs the always-NHWC-round-trip baseline — what the layout bench compares
+    against realized wall clock.
+
+    Pricing mirrors the cost graph exactly: an elided edge pays the
+    direct store into the consumer's format (½·T) plus the matched
+    streaming load (½·T(dst, dst)); the round-trip baseline pays the 3-D
+    tensor store (½·T(src, 3D)) plus the converting load into the
+    consumer's layout (full T, the ``_split_load_matrix`` convention).
+    ``calibration`` (``cost_model.TransitionCalibration``) rescales each
+    layout pair by its measured/predicted ratio.
+    """
+    edges = []
+    roundtrip_total = elided_total = 0.0
+    for (u, v), tr in sorted(lowered.transitions.items()):
+        node_v = graph.nodes[v]
+        if (not tr.elide or tr.layout.kind == "nhwc"
+                or node_v.kind is not LayerKind.CONV):
+            continue
+        conv = node_v.conv
+        dst = lowered[v].algo
+        src = lowered.convs[u].algo if u in lowered.convs else KN2ROW
+        c_prev = tr.layout.c
+        roundtrip = (0.5 * transition_cost(src, KN2ROW, conv, c_prev, spec,
+                                           calibration=calibration)
+                     + transition_cost(KN2ROW, dst, conv, c_prev, spec,
+                                       calibration=calibration))
+        elided = (0.5 * transition_cost(src, dst, conv, c_prev, spec,
+                                        calibration=calibration)
+                  + 0.5 * transition_cost(dst, dst, conv, c_prev, spec,
+                                          calibration=calibration))
+        roundtrip_total += roundtrip
+        elided_total += elided
+        edges.append({"src": u, "dst": v, "layout": tr.layout.key,
+                      "roundtrip_s": roundtrip, "elided_s": elided,
+                      "saving_s": roundtrip - elided})
+    return {"edges": edges, "n_elided": len(edges),
+            "predicted_roundtrip_s": roundtrip_total,
+            "predicted_elided_s": elided_total,
+            "predicted_saving_s": roundtrip_total - elided_total}
 
 
 # ---------------------------------------------------------------------------
@@ -357,7 +634,10 @@ def map_network(graph: Graph,
             df = ch.dataflows[pick]
             dataflows[nid] = df if df is not None else Dataflow.NS
         elif ch.labels and ch.labels[pick].startswith("store:"):
-            store_formats[nid] = ch.algos[pick].input_layout
+            # Keyed by the split *producer* (the graph node that stores),
+            # not the virtual v_s id — this is what lower_plan consumes.
+            store_formats[builder.split_producer[nid]] = \
+                ch.algos[pick].input_layout
     return ExecutionPlan(p1=hw.p1, p2=hw.p2, assignment=assignment,
                          dataflows=dataflows, store_formats=store_formats,
                          total_cost_s=res.cost, solver=res, choices=choices)

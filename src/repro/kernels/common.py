@@ -53,16 +53,21 @@ def pad_to(x: jax.Array, multiples: Sequence[int]) -> jax.Array:
 
 
 def batchable(fn):
-    """Lift a single-image conv ``fn(x: (H, W, C), ...)`` to also accept a
-    batched ``(B, H, W, C)`` input by vmapping over the leading axis.
+    """Lift a single-image conv ``fn(x, ...)`` to also accept a batched
+    input by vmapping over the leading axis.
 
-    Pallas kernels batch via ``pallas_call``'s batching rule (an extra outer
-    grid dimension), so one compiled program serves the whole batch; the
-    jnp reference paths batch for free.
+    The un-batched rank of ``x`` depends on the input layout the call
+    carries (``in_layout`` kwarg, a ``core.layouts.LayoutSpec``): NHWC is
+    rank 3, a Toeplitz matrix rank 2, Winograd tiles rank 4 — one extra
+    dim means a batch. Pallas kernels batch via ``pallas_call``'s batching
+    rule (an extra outer grid dimension), so one compiled program serves
+    the whole batch; the jnp reference paths batch for free.
     """
     @functools.wraps(fn)
     def wrapper(x, *args, **kwargs):
-        if x.ndim == 4:
+        spec = kwargs.get("in_layout")
+        base = 3 if spec is None or spec.kind == "nhwc" else spec.base_rank
+        if x.ndim == base + 1:
             return jax.vmap(lambda xi: fn(xi, *args, **kwargs))(x)
         return fn(x, *args, **kwargs)
     return wrapper

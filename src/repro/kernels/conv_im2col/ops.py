@@ -20,23 +20,38 @@ from repro.core.cost_model import Dataflow
 from repro.kernels.common import (batchable, ceil_to, default_interpret,
                                   pad_bias)
 from repro.kernels.conv_im2col.conv_im2col import conv_im2col_call
-from repro.kernels.gemm.ops import dataflow_blocks
+from repro.kernels.gemm.ops import dataflow_blocks, toeplitz_gemm
+from repro.kernels.layouts import materialize, restore
 
 
 @batchable
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue"))
+    "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue",
+    "in_layout", "out_layout"))
 def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: str = "SAME",
                 dataflow: Dataflow = Dataflow.NS,
                 p1: int = 128, p2: int = 128,
                 interpret: Optional[bool] = None,
                 epilogue: str = "none",
-                bias: Optional[jax.Array] = None) -> jax.Array:
+                bias: Optional[jax.Array] = None,
+                in_layout=None, out_layout=None) -> jax.Array:
     """Convolution via the im2col algorithm. x: (H, W, Cin) or (B, H, W, Cin),
     w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout). ``epilogue`` fuses the
-    post-GEMM auxiliary unit (ReLU / bias) into the kernel's output flush."""
+    post-GEMM auxiliary unit (ReLU / bias) into the kernel's output flush.
+
+    ``in_layout``/``out_layout`` (``core.layouts.LayoutSpec``) realize the
+    plan's store formats: a "toeplitz" ``in_layout`` means ``x`` IS the
+    layer's Toeplitz matrix — the window gather was paid once at the
+    producer's store, so the layer is a plain dataflow-bound GEMM; a
+    non-NHWC ``out_layout`` emits the consumer's store format directly."""
     interpret = default_interpret() if interpret is None else interpret
+    if in_layout is not None and in_layout.kind == "toeplitz":
+        out = toeplitz_gemm(x, w.reshape(-1, w.shape[-1]), in_layout,
+                            dataflow, p1, p2, interpret=interpret,
+                            epilogue=epilogue, bias=bias)
+        return materialize(out, out_layout)
+    x = restore(x, in_layout)
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
     if padding == "SAME":
@@ -66,4 +81,4 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
                            o1=o1p, o2=o2, bo1=bo1, bc=bc,
                            interpret=interpret, epilogue=epilogue,
                            bias=pad_bias(bias, c_out, c_outp))
-    return out[:o1, :, :c_out]
+    return materialize(out[:o1, :, :c_out], out_layout)

@@ -43,6 +43,15 @@ def toeplitz_ref(x: jax.Array, k1: int, k2: int, stride: int = 1,
     return jnp.concatenate(cols, axis=1)
 
 
+def conv_from_toeplitz_ref(t: jax.Array, w: jax.Array, o1: int,
+                           o2: int) -> jax.Array:
+    """Eq. 2 GEMM on a pre-materialized Toeplitz operand (matched-layout
+    load): t (O1·O2, K1K2·Cin) or (B, …), w (K1, K2, Cin, Cout)."""
+    c_out = w.shape[-1]
+    out = t.astype(jnp.float32) @ w.reshape(-1, c_out).astype(jnp.float32)
+    return out.reshape(*t.shape[:-2], o1, o2, c_out).astype(t.dtype)
+
+
 @batchable
 def conv_via_toeplitz_ref(x: jax.Array, w: jax.Array, stride: int = 1,
                           padding: str = "SAME") -> jax.Array:

@@ -55,6 +55,28 @@ def gemm(a: jax.Array, b: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=(
+    "spec", "dataflow", "p1", "p2", "interpret", "epilogue"))
+def toeplitz_gemm(t: jax.Array, w2d: jax.Array, spec,
+                  dataflow: Dataflow = Dataflow.NS,
+                  p1: int = 128, p2: int = 128,
+                  interpret: Optional[bool] = None,
+                  epilogue: str = "none",
+                  bias: Optional[jax.Array] = None) -> jax.Array:
+    """Matched-layout conv leg: a consumer whose edge already carries its
+    Toeplitz matrix (``core.layouts.LayoutSpec`` kind "toeplitz") feeds the
+    dataflow-bound GEMM unit directly — Table 2's streaming Load(n, n), no
+    window re-gather. ``t``: (O1·O2, K1K2·Cin) or batched (B, …);
+    ``w2d``: (K1K2·Cin, Cout) → (…, O1, O2, Cout)."""
+    if t.ndim == 3:
+        return jax.vmap(lambda ti: toeplitz_gemm(
+            ti, w2d, spec, dataflow, p1, p2, interpret=interpret,
+            epilogue=epilogue, bias=bias))(t)
+    out = gemm(t, w2d, dataflow, p1, p2, interpret=interpret,
+               epilogue=epilogue, bias=bias)
+    return out.reshape(spec.o1, spec.o2, w2d.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=(
     "dataflow", "p1", "p2", "interpret", "out_dtype", "epilogue"))
 def batched_gemm(a: jax.Array, b: jax.Array,
                  dataflow: Dataflow = Dataflow.NS,

@@ -19,22 +19,30 @@ from repro.kernels.common import (batchable, ceil_to, default_interpret,
                                   pad_bias)
 from repro.kernels.gemm.ops import dataflow_blocks
 from repro.kernels.kn2row.kn2row import pad_accumulate, unit_conv_gemms
+from repro.kernels.layouts import materialize, restore
 
 
 @batchable
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue"))
+    "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue",
+    "in_layout", "out_layout"))
 def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: str = "SAME",
                 dataflow: Dataflow = Dataflow.NS,
                 p1: int = 128, p2: int = 128,
                 interpret: Optional[bool] = None,
                 epilogue: str = "none",
-                bias: Optional[jax.Array] = None) -> jax.Array:
+                bias: Optional[jax.Array] = None,
+                in_layout=None, out_layout=None) -> jax.Array:
     """Convolution via kn2row. x: (H, W, Cin) or (B, H, W, Cin),
     w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout). ``epilogue`` fuses the
-    post-GEMM auxiliary unit into the final pad-accumulate flush."""
+    post-GEMM auxiliary unit into the final pad-accumulate flush.
+
+    kn2row's input layout IS the 3-D tensor (§3.3), so a matched
+    ``in_layout`` is simply NHWC; other layouts are restored on entry
+    (converting load), and ``out_layout`` emits a consumer's store format."""
     interpret = default_interpret() if interpret is None else interpret
+    x = restore(x, in_layout)
     h, w_dim, c_in = x.shape
     k1, k2, _, c_out = w.shape
     if padding == "SAME":
@@ -67,4 +75,4 @@ def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
     out = pad_accumulate(p, k1=k1, k2=k2, o1=o1, o2=o2, stride=stride,
                          interpret=interpret, epilogue=epilogue,
                          bias=pad_bias(bias, c_out, np_))
-    return out[:, :, :c_out]
+    return materialize(out[:, :, :c_out], out_layout)

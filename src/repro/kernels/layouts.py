@@ -1,0 +1,116 @@
+"""Runtime layout conversions — the store/load legs of Table 2 in software.
+
+``materialize`` converts a producer's NHWC output into the DRAM store
+format an edge carries (``core.layouts.LayoutSpec``); ``restore`` is the
+exact inverse, used when a consumer at a split fan-out needs a different
+representation than the one stored (the Table 2 "converting load").
+
+Both ends are pure gathers with indices precomputed in numpy at trace
+time, so XLA sees a single static gather per conversion and can fuse it
+with the neighboring kernels — the software analogue of the paper's
+pipelined Data Layout Transformation units. Overlapping positions in the
+Toeplitz and Winograd-tile layouts hold bitwise-identical copies, so
+``restore(materialize(x)) == x`` exactly (no tolerance needed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import LayoutSpec, invertible, is_nhwc
+from repro.kernels.conv_im2col.ref import toeplitz_ref
+
+
+def materialize(x: jax.Array, spec: Optional[LayoutSpec]) -> jax.Array:
+    """NHWC ``(…, H, W, C)`` → the ``spec`` store format (batch preserved)."""
+    if is_nhwc(spec):
+        return x
+    if x.ndim == 4:
+        return jax.vmap(lambda xi: materialize(xi, spec))(x)
+    if x.shape != (spec.h, spec.w, spec.c):
+        raise ValueError(f"cannot materialize {x.shape} as {spec.key}")
+    if spec.kind == "toeplitz":
+        return toeplitz_ref(x, spec.k1, spec.k2, spec.stride, spec.padding)
+    return _winograd_tiles(x, spec)
+
+
+def restore(v: jax.Array, spec: Optional[LayoutSpec]) -> jax.Array:
+    """Exact inverse of ``materialize`` — the converting-load leg."""
+    if is_nhwc(spec):
+        return v
+    if v.ndim == spec.base_rank + 1:
+        return jax.vmap(lambda vi: restore(vi, spec))(v)
+    if not invertible(spec):
+        raise ValueError(f"layout {spec.key} is not invertible; "
+                         "lower_plan should not have stored it")
+    if spec.kind == "toeplitz":
+        row, tap = _toeplitz_restore_indices(spec)
+        t3 = v.reshape(spec.o1 * spec.o2, spec.k1 * spec.k2, spec.c)
+        return t3[jnp.asarray(row), jnp.asarray(tap), :]
+    tile, a, b = _winograd_restore_indices(spec)
+    return v[jnp.asarray(tile), jnp.asarray(a), jnp.asarray(b), :]
+
+
+# ---------------------------------------------------------------------------
+# Winograd scattered-tile layout: overlapping T×T input tiles, stride m.
+# ---------------------------------------------------------------------------
+
+def _winograd_tiles(x: jax.Array, spec: LayoutSpec) -> jax.Array:
+    """(H, W, C) → (tiles_y·tiles_x, T, T, C), padded exactly as the
+    single-round F(m,r) conv core pads (SAME halo + bottom/right fill so
+    every tile slice is in range)."""
+    t, m = spec.t, spec.m
+    ty, tx = spec.tiles_y, spec.tiles_x
+    pt, pl_ = spec.pad_top, spec.pad_left
+    need_r, need_c = ty * m + spec.r - 1, tx * m + spec.r - 1
+    xp = jnp.pad(x, ((pt, max(0, need_r - spec.h - pt)),
+                     (pl_, max(0, need_c - spec.w - pl_)), (0, 0)))
+    r_idx = np.arange(ty)[:, None] * m + np.arange(t)[None, :]   # (ty, t)
+    c_idx = np.arange(tx)[:, None] * m + np.arange(t)[None, :]   # (tx, t)
+    tiles = xp[jnp.asarray(r_idx[:, None, :, None]),
+               jnp.asarray(c_idx[None, :, None, :]), :]
+    return tiles.reshape(ty * tx, t, t, spec.c)
+
+
+@functools.lru_cache(maxsize=None)
+def _winograd_restore_indices(spec: LayoutSpec
+                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-pixel (tile, row-in-tile, col-in-tile) gather indices: pixel
+    (y, x) lives at padded (y+pt, x+pl), inside tile (min(p//m, tiles-1))
+    at local offset p - tile·m (< T because tiles overlap by r-1)."""
+    m, ty, tx = spec.m, spec.tiles_y, spec.tiles_x
+    ys = np.arange(spec.h) + spec.pad_top
+    xs = np.arange(spec.w) + spec.pad_left
+    iy = np.minimum(ys // m, ty - 1)
+    ix = np.minimum(xs // m, tx - 1)
+    a, b = ys - iy * m, xs - ix * m
+    assert a.max() < spec.t and b.max() < spec.t
+    tile = iy[:, None] * tx + ix[None, :]                 # (H, W)
+    return tile, a[:, None] + np.zeros_like(tile), \
+        b[None, :] + np.zeros_like(tile)
+
+
+# ---------------------------------------------------------------------------
+# Toeplitz layout: (O1·O2, K1·K2·C) — recoverable while stride ≤ kernel.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _toeplitz_restore_indices(spec: LayoutSpec
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-pixel (gemm-row, kernel-tap) gather indices: padded coord p is
+    sampled by output position min(p//s, O-1) at tap p - pos·s (< K by the
+    ``invertible`` guard)."""
+    s, o1, o2 = spec.stride, spec.o1, spec.o2
+    ys = np.arange(spec.h) + spec.pad_top
+    xs = np.arange(spec.w) + spec.pad_left
+    oy = np.minimum(ys // s, o1 - 1)
+    ox = np.minimum(xs // s, o2 - 1)
+    dk1, dk2 = ys - oy * s, xs - ox * s
+    assert dk1.max() < spec.k1 and dk2.max() < spec.k2
+    row = oy[:, None] * o2 + ox[None, :]                  # (H, W)
+    tap = dk1[:, None] * spec.k2 + dk2[None, :]
+    return row, tap

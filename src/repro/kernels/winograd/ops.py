@@ -18,7 +18,9 @@ from repro.core.cost_model import Dataflow
 from repro.kernels.common import (apply_epilogue, batchable, ceil_to,
                                   default_interpret)
 from repro.kernels.gemm.ops import batched_gemm
-from repro.kernels.winograd.winograd import (input_transform, matrices,
+from repro.kernels.layouts import materialize, restore
+from repro.kernels.winograd.winograd import (input_transform,
+                                             input_transform_tiles, matrices,
                                              output_transform,
                                              transform_kernel_weights)
 
@@ -51,27 +53,62 @@ def _conv_f_mr(x: jax.Array, w: jax.Array, m: int, o1: int, o2: int,
     return y[:o1, :o2, :c_out]
 
 
+def _conv_from_tiles(tiles: jax.Array, w: jax.Array, m: int, spec,
+                     dataflow: Dataflow, p1: int, p2: int,
+                     interpret: bool, epilogue: str,
+                     bias: Optional[jax.Array]) -> jax.Array:
+    """Matched scattered-layout consumer (§3.3): the producer stored this
+    layer's (T, T) input tiles, so the spatial re-gather is skipped and the
+    pipeline is tile transform → batched GEMM → output transform."""
+    r = w.shape[0]
+    c_out = w.shape[-1]
+    ty, tx = spec.tiles_y, spec.tiles_x
+    v = input_transform_tiles(tiles, m=m, r=r, tiles_y=ty, tiles_x=tx,
+                              interpret=interpret)
+    u = transform_kernel_weights(w, m, r).astype(tiles.dtype)
+    mm = batched_gemm(v, u, dataflow=dataflow, p1=p1, p2=p2,
+                      interpret=interpret, out_dtype=tiles.dtype)
+    y = output_transform(mm, m=m, r=r, tiles_y=ty, tiles_x=tx,
+                         interpret=interpret, epilogue=epilogue,
+                         bias=(bias.reshape(1, c_out)
+                               if bias is not None else None))
+    return y[:spec.o1, :spec.o2, :c_out]
+
+
 @batchable
 @functools.partial(jax.jit, static_argnames=(
-    "m", "padding", "dataflow", "p1", "p2", "interpret", "epilogue"))
+    "m", "padding", "dataflow", "p1", "p2", "interpret", "epilogue",
+    "in_layout", "out_layout"))
 def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
                   padding: str = "SAME",
                   dataflow: Dataflow = Dataflow.NS,
                   p1: int = 128, p2: int = 128,
                   interpret: Optional[bool] = None,
                   epilogue: str = "none",
-                  bias: Optional[jax.Array] = None) -> jax.Array:
+                  bias: Optional[jax.Array] = None,
+                  in_layout=None, out_layout=None) -> jax.Array:
     """Winograd convolution, stride 1, square K×K kernels.
 
     K > r runs in ceil(K/r)² rounds of shifted r×r sub-kernels with output
     accumulation (§6.1.2's K1K2/r² rounds). Single-round kernels fuse the
     epilogue into the output transform; the multi-round path must apply it
     after the cross-round accumulation (ReLU does not distribute over +).
+
+    A matching "winograd" ``in_layout`` (same m, single-round K == r) means
+    ``x`` is already the scattered tile layout — the layer consumes it
+    without the spatial re-gather; any other layout is restored on entry.
+    A non-NHWC ``out_layout`` emits the consumer's store format.
     """
     interpret = default_interpret() if interpret is None else interpret
     r = 3
     k1, k2, c_in, c_out = w.shape
     assert k1 == k2, "winograd path requires square kernels"
+    if in_layout is not None and in_layout.kind == "winograd" \
+            and in_layout.m == m and k1 == in_layout.r:
+        y = _conv_from_tiles(x, w, m, in_layout, dataflow, p1, p2,
+                             interpret, epilogue, bias)
+        return materialize(y, out_layout)
+    x = restore(x, in_layout)
     h, w_dim, _ = x.shape
     if padding == "SAME":
         o1, o2 = h, w_dim
@@ -82,9 +119,10 @@ def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
         pt_full = pl_full = 0
 
     if k1 == r:
-        return _conv_f_mr(x, w, m, o1, o2, pt_full, pl_full,
-                          dataflow, p1, p2, interpret,
-                          epilogue=epilogue, bias=bias)
+        return materialize(
+            _conv_f_mr(x, w, m, o1, o2, pt_full, pl_full,
+                       dataflow, p1, p2, interpret,
+                       epilogue=epilogue, bias=bias), out_layout)
 
     # Multi-round: pad kernel to multiple of r and accumulate shifted rounds.
     rounds = -(-k1 // r)
@@ -103,4 +141,4 @@ def conv_winograd(x: jax.Array, w: jax.Array, m: int = 2,
             # VALID conv of xs with sub gives exactly (o1, o2).
             acc = acc + _conv_f_mr(xs, sub, m, o1, o2, 0, 0,
                                    dataflow, p1, p2, interpret)
-    return apply_epilogue(acc, epilogue, bias)
+    return materialize(apply_epilogue(acc, epilogue, bias), out_layout)

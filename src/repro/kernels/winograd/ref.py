@@ -8,6 +8,26 @@ from repro.kernels.common import batchable
 from repro.kernels.winograd.winograd import matrices
 
 
+def winograd_from_tiles_ref(tiles: jax.Array, w: jax.Array, m: int,
+                            tiles_y: int, tiles_x: int, o1: int,
+                            o2: int) -> jax.Array:
+    """Eq. 5/6 on pre-gathered scattered-layout tiles (matched load, §3.3):
+    tiles (tiles_y·tiles_x, T, T, Cin) spatial values, w (r, r, Cin, Cout)
+    → (o1, o2, Cout). The transforms run unchanged — only the spatial
+    re-gather of the tile layout is skipped."""
+    r = w.shape[0]
+    bt, g_mat, at = (jnp.asarray(a) for a in matrices(m, r))
+    c_out = w.shape[-1]
+    u = jnp.einsum("ti,ijco,uj->tuco", g_mat, w.astype(jnp.float32), g_mat)
+    d = tiles.astype(jnp.float32)                     # (n, t, t, c)
+    v = jnp.einsum("ti,nijc,uj->tunc", bt, d, bt)     # (t, t, n, c)
+    mm = jnp.einsum("tunc,tuco->tuno", v, u)          # (t, t, n, co)
+    y = jnp.einsum("at,tuno,bu->nabo", at, mm, at)    # (n, m, m, co)
+    y = y.reshape(tiles_y, tiles_x, m, m, c_out).transpose(0, 2, 1, 3, 4)
+    y = y.reshape(tiles_y * m, tiles_x * m, c_out)[:o1, :o2, :]
+    return y.astype(tiles.dtype)
+
+
 @batchable
 def winograd_ref(x: jax.Array, w: jax.Array, m: int = 2,
                  padding: str = "SAME") -> jax.Array:

@@ -120,6 +120,36 @@ def input_transform(x: jax.Array, *, m: int, r: int, tiles_y: int,
     )(x, bt_host)
 
 
+def input_transform_tiles(tiles: jax.Array, *, m: int, r: int, tiles_y: int,
+                          tiles_x: int, interpret: bool = True) -> jax.Array:
+    """Matched-layout input transform: ``tiles`` (tiles_y·tiles_x, T, T, C)
+    already sit in the scattered Winograd layout (the producer stored them
+    — Table 2 row 4's streaming load), so no spatial re-gather happens
+    here; each tile goes straight through Bᵀ d B.
+    Returns V: (T², tiles_y·tiles_x, C)."""
+    t = m + r - 1
+    n, _, _, c = tiles.shape
+    assert n == tiles_y * tiles_x, (n, tiles_y, tiles_x)
+    bt_host = jnp.asarray(matrices(m, r)[0])
+
+    def kernel(t_ref, bt_ref, v_ref):
+        d = t_ref[...].astype(jnp.float32)        # (tiles_x, t, t, c)
+        bt = bt_ref[...]
+        v = jnp.einsum("ti,xijc,uj->tuxc", bt, d, bt)
+        v_ref[...] = v.reshape(t * t, tiles_x, c).astype(v_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(tiles_y,),
+        in_specs=[pl.BlockSpec((tiles_x, t, t, c), lambda i: (i, 0, 0, 0)),
+                  pl.BlockSpec((t, t), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((t * t, tiles_x, c), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t * t, tiles_y * tiles_x, c),
+                                       tiles.dtype),
+        interpret=interpret,
+    )(tiles, bt_host)
+
+
 # ---------------------------------------------------------------------------
 # 4. Output transform: M (scattered) → spatial Y.
 # ---------------------------------------------------------------------------

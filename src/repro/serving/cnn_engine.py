@@ -26,9 +26,10 @@ larger tick are re-zeroed (never the whole buffer).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -62,6 +63,23 @@ class CNNRequest:
     t_submit: Optional[float] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestTrace:
+    """Per-request lifecycle accounting (engine-clock timestamps; the
+    service leg is the tick's measured wall time, so with a virtual clock
+    latency still combines simulated queueing with real service time —
+    the same accounting the bench replay harness uses)."""
+    rid: int
+    t_submit: float
+    t_dispatch: float
+    t_done: float
+    bucket: int
+    queue_s: float
+    service_s: float
+    latency_s: float
+    slo_ok: bool
+
+
 class CNNServingEngine:
     """Batches single-image requests through per-bucket compiled plans.
 
@@ -72,6 +90,9 @@ class CNNServingEngine:
     trace replays pass a virtual clock). ``warmup=True`` runs one padded
     tick per bucket at construction, pre-compiling every executable and
     priming the per-bucket service-time estimates the scheduler uses.
+    ``trace_window`` bounds the per-request ``RequestTrace`` log backing
+    the ``stats()`` latency aggregates (totals and SLO-violation counters
+    keep counting past the window).
     """
 
     def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
@@ -85,7 +106,8 @@ class CNNServingEngine:
                  epilogue: str = "bias_relu",
                  tuning=None,
                  clock: Callable[[], float] = time.monotonic,
-                 warmup: bool = False) -> None:
+                 warmup: bool = False,
+                 trace_window: int = 2048) -> None:
         self.graph = graph
         self.params = params
         self.buckets = (sorted(set(int(b) for b in buckets)) if buckets
@@ -123,6 +145,13 @@ class CNNServingEngine:
         self._svc: Dict[int, Optional[float]] = {b: None for b in self.buckets}
         self.dispatches: Dict[int, int] = {b: 0 for b in self.buckets}
         self.last_tick: Optional[Dict[str, object]] = None
+        # --- observability (ROADMAP item): per-request lifecycle records
+        # in a bounded window plus running totals, surfaced by stats().
+        self.request_log: Deque[RequestTrace] = \
+            collections.deque(maxlen=trace_window)
+        self.submitted_total = 0
+        self.served_total = 0
+        self.slo_violations = 0
         if warmup:
             self._warmup()
 
@@ -140,6 +169,7 @@ class CNNServingEngine:
         req.image = img                # persist the validated array
         if req.t_submit is None:
             req.t_submit = self._clock()
+        self.submitted_total += 1
         self.queue.append(req)
 
     # --------------------------------------------------------- scheduling
@@ -214,19 +244,67 @@ class CNNServingEngine:
         prev = self._svc[bucket]
         self._svc[bucket] = wall if prev is None else 0.5 * prev + 0.5 * wall
         self.dispatches[bucket] += 1
+        self.served_total += len(batch)
+        for req in batch:
+            assert req.t_submit is not None
+            queue_s = max(0.0, now - req.t_submit)
+            latency_s = queue_s + wall
+            slo_ok = self.slo_s is None or latency_s <= self.slo_s
+            if not slo_ok:
+                self.slo_violations += 1
+            self.request_log.append(RequestTrace(
+                rid=req.rid, t_submit=req.t_submit, t_dispatch=now,
+                t_done=now + wall, bucket=bucket, queue_s=queue_s,
+                service_s=wall, latency_s=latency_s, slo_ok=slo_ok))
         self.last_tick = {"bucket": bucket, "served": len(batch),
                           "wall_s": wall, "now": now}
         return len(batch)
 
     def reset(self) -> None:
-        """Drop queued/served request state (trace replays reuse one warmed
-        engine across traces). Compiled executables, the staging buffer and
-        the measured service-time estimates are kept — resetting never
-        forgets what the device taught us."""
+        """Drop queued/served request state and observability counters
+        (trace replays reuse one warmed engine across traces). Compiled
+        executables, the staging buffer and the measured service-time
+        estimates are kept — resetting never forgets what the device
+        taught us."""
         self.queue.clear()
         self.done.clear()
         self.dispatches = {b: 0 for b in self.buckets}
         self.last_tick = None
+        self.request_log.clear()
+        self.submitted_total = 0
+        self.served_total = 0
+        self.slo_violations = 0
+
+    # ------------------------------------------------------ observability
+    def stats(self) -> Dict[str, object]:
+        """Snapshot of the engine's request accounting: totals, per-bucket
+        dispatch counts and service EMAs, SLO-violation count, and latency
+        / queue-wait aggregates over the bounded ``request_log`` window
+        (submit→dispatch→done timestamps live in the individual
+        ``RequestTrace`` records). Pure read — never mutates state."""
+        def _agg(vals: List[float]) -> Optional[Dict[str, float]]:
+            if not vals:
+                return None
+            arr = np.asarray(vals)
+            return {"mean_ms": float(arr.mean()) * 1e3,
+                    "p50_ms": float(np.percentile(arr, 50)) * 1e3,
+                    "p99_ms": float(np.percentile(arr, 99)) * 1e3,
+                    "max_ms": float(arr.max()) * 1e3}
+
+        window = list(self.request_log)
+        return {
+            "submitted": self.submitted_total,
+            "served": self.served_total,
+            "queued": len(self.queue),
+            "slo_s": self.slo_s,
+            "slo_violations": self.slo_violations,
+            "dispatches": dict(self.dispatches),
+            "service_ema_s": {b: s for b, s in self._svc.items()
+                              if s is not None},
+            "window": len(window),
+            "latency": _agg([t.latency_s for t in window]),
+            "queue_wait": _agg([t.queue_s for t in window]),
+        }
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:
         """Drain the queue, ignoring SLO waits (shutdown/offline replay)."""

@@ -108,6 +108,50 @@ def test_queue_smaller_than_smallest_bucket(tiny):
     np.testing.assert_array_equal(eng._batch_buf[2:], 0)
 
 
+# ------------------------------------------------------------ observability
+def test_engine_stats_snapshot(tiny):
+    """Per-request submit→dispatch→done accounting lives in the engine now
+    (ROADMAP item), not only in the bench replay harness: totals, latency
+    aggregates over the request log, SLO-violation counters, and reset()
+    semantics (counters clear, measured service estimates survive)."""
+    g, params = tiny
+    clock = FakeClock()
+    eng = CNNServingEngine(g, params, None, batch_size=2, clock=clock)
+    s0 = eng.stats()
+    assert s0["submitted"] == s0["served"] == s0["queued"] == 0
+    assert s0["latency"] is None and s0["slo_violations"] == 0
+    submit_n(eng, 3)                        # t_submit = 0.0
+    clock.t = 0.5
+    assert eng.step() == 2                  # bucket 2, queued 0.5s
+    assert eng.step() == 1                  # bucket 1
+    s = eng.stats()
+    assert s["submitted"] == 3 and s["served"] == 3 and s["queued"] == 0
+    assert s["dispatches"] == {1: 1, 2: 1}
+    assert s["window"] == 3 and len(eng.request_log) == 3
+    for tr in eng.request_log:
+        assert tr.t_dispatch == 0.5 and tr.t_submit == 0.0
+        assert tr.t_done == pytest.approx(0.5 + tr.service_s)
+        assert tr.latency_s == pytest.approx(0.5 + tr.service_s)
+        assert tr.slo_ok                    # slo_s=None → never violated
+    assert s["slo_violations"] == 0
+    assert s["latency"]["p50_ms"] >= 500.0  # 0.5s queueing floor
+    assert s["queue_wait"]["max_ms"] == pytest.approx(500.0)
+    assert set(s["service_ema_s"]) == {1, 2}
+    # an impossible SLO counts violations (latency always exceeds 0)
+    eng.slo_s = 0.0
+    submit_n(eng, 1, start_rid=3)
+    assert eng.step(now=clock.t) == 1
+    assert eng.stats()["slo_violations"] == 1
+    assert not eng.request_log[-1].slo_ok
+    # reset clears accounting but keeps what the device taught us
+    emas = dict(eng.stats()["service_ema_s"])
+    eng.reset()
+    s2 = eng.stats()
+    assert s2["submitted"] == s2["served"] == s2["window"] == 0
+    assert s2["slo_violations"] == 0 and s2["latency"] is None
+    assert s2["service_ema_s"] == emas
+
+
 # ------------------------------------------------------------ SLO scheduler
 def test_slo_forced_early_dispatch(tiny):
     """A lone request dispatches through bucket 1 exactly when its deadline

@@ -196,6 +196,7 @@ def test_googlenet_bias_relu_lowering_parity(reduced_googlenet):
     low = lower_plan(g, None, epilogue="bias_relu")
     assert all(l.epilogue == "bias_relu" for l in low.values())
 
+    @overlay.nhwc_conv
     def unfused(x, w, *a, stride=1, padding="SAME", epilogue="none",
                 bias=None, **kw):
         y = conv_ref(x, w, stride=stride, padding=padding)

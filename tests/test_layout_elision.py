@@ -1,0 +1,364 @@
+"""Layout-aware lowering: store formats are materialized between layers.
+
+The PBQP's third output (after algorithm and dataflow) is the per-edge DRAM
+store format; these tests pin that it is now *observable in the executed
+program*: matched consumers read the stored format directly (no NHWC round
+trip), mismatched split siblings pay a converting load, and — the §3
+invariant extended to layouts — none of it changes the computed function.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn import overlay
+from repro.cnn.executor import compile_plan, forward, init_params
+from repro.cnn.models import _concat, _start, googlenet
+from repro.core.algorithms import (IM2COL, KN2ROW, Layout, WINO_2_3,
+                                   WINO_4_3)
+from repro.core.autotune import (Binding, LayerTuning, TuningRecord,
+                                 elision_overrides_from_meta, record_key,
+                                 tune_elision)
+from repro.core.cost_model import Dataflow, TransitionCalibration
+from repro.core.dse import identify_parameters
+from repro.core.graph import ConvMeta, LayerKind
+from repro.core.layouts import (LayoutSpec, consumer_spec, invertible,
+                                is_nhwc)
+from repro.core.mapper import lower_plan, map_network, transition_report
+from repro.kernels.layouts import materialize, restore
+
+RNG = np.random.default_rng(3)
+
+
+def rnd(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ------------------------------------------------------------ conversions
+@pytest.mark.parametrize("spec", [
+    LayoutSpec("toeplitz", h=11, w=9, c=4, k1=3, k2=3, stride=1),
+    LayoutSpec("toeplitz", h=11, w=9, c=4, k1=3, k2=3, stride=2),
+    LayoutSpec("toeplitz", h=11, w=9, c=4, k1=1, k2=1, stride=1),
+    LayoutSpec("toeplitz", h=12, w=12, c=3, k1=7, k2=7, stride=2),
+    LayoutSpec("toeplitz", h=11, w=9, c=4, k1=3, k2=3, stride=1,
+               padding="VALID"),
+    LayoutSpec("winograd", h=10, w=7, c=3, k1=3, k2=3, m=2, r=3),
+    LayoutSpec("winograd", h=10, w=7, c=3, k1=3, k2=3, m=4, r=3),
+])
+def test_materialize_restore_round_trip_exact(spec):
+    """Overlapping positions hold bitwise copies, so the round trip is
+    exact — no tolerance — for single images and batches."""
+    x = rnd(spec.h, spec.w, spec.c)
+    v = materialize(x, spec)
+    assert v.ndim == spec.base_rank
+    np.testing.assert_array_equal(np.asarray(restore(v, spec)),
+                                  np.asarray(x))
+    xb = jnp.stack([x, 2 * x, -x])
+    vb = materialize(xb, spec)
+    assert vb.shape == (3,) + v.shape
+    np.testing.assert_array_equal(np.asarray(restore(vb, spec)),
+                                  np.asarray(xb))
+
+
+def test_layout_spec_validation_and_guards():
+    with pytest.raises(ValueError, match="layout kind"):
+        LayoutSpec("nchw")
+    with pytest.raises(ValueError, match="padding"):
+        LayoutSpec("toeplitz", h=4, w=4, c=2, k1=3, k2=3, padding="same")
+    with pytest.raises(ValueError, match="single-round"):
+        LayoutSpec("winograd", h=8, w=8, c=2, k1=5, k2=5, m=2, r=3)
+    # Toeplitz drops pixels when windows skip them → not invertible, and
+    # consumer_spec refuses to offer it as a store format.
+    skip = LayoutSpec("toeplitz", h=9, w=9, c=2, k1=1, k2=1, stride=2)
+    assert not invertible(skip)
+    conv = ConvMeta(c_in=2, c_out=3, h1=9, h2=9, k1=1, k2=1, stride=2)
+    assert consumer_spec(IM2COL, conv) is None
+    # kn2row consumes the 3-D tensor as-is; multi-round Winograd cannot
+    # consume tiles.
+    assert is_nhwc(consumer_spec(KN2ROW, conv))
+    conv5 = ConvMeta(c_in=2, c_out=3, h1=9, h2=9, k1=5, k2=5, stride=1)
+    assert consumer_spec(WINO_2_3, conv5) is None
+
+
+# --------------------------------------------------- lower_plan structure
+@pytest.fixture(scope="module")
+def mapped_googlenet():
+    g = googlenet(res=56, scale=0.25)
+    hw = identify_parameters(g, max_dim=512)
+    plan = map_network(g, hw=hw)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, plan, params
+
+
+def test_lowered_program_structure(mapped_googlenet):
+    g, plan, _ = mapped_googlenet
+    low = lower_plan(g, plan)
+    # every edge got a transition; the mapping protocol still serves the
+    # pre-layout call sites
+    assert set(low.transitions) == set(g.edges)
+    assert len(low) == len(g.conv_nodes())
+    assert all(low[n.id] is low.convs[n.id] for n in g.conv_nodes())
+    assert all(lo.epilogue == "relu" for lo in low.values())
+    # the PBQP chose store formats for every split producer; the lowering
+    # realizes them (store_formats is keyed by producer node)
+    for producer, fmt in plan.store_formats.items():
+        assert g.out_degree(producer) > 1
+        if fmt is not Layout.TENSOR3D:
+            assert producer in low.store_specs
+            assert low.store_specs[producer].layout is fmt
+    # elided edges consume exactly their producer's stored spec
+    for (u, v) in low.elided_edges:
+        assert low.convs[v].in_layout == low.store_specs[u]
+    assert low.elided_edges, "reduced GoogleNet must elide some transitions"
+    # the network input never stores a format — it arrives in NHWC
+    src = g.source()
+    assert src not in low.store_specs
+    assert all(u != src for (u, v) in low.elided_edges)
+
+
+def test_elide_false_is_layout_agnostic(mapped_googlenet):
+    g, plan, _ = mapped_googlenet
+    low = lower_plan(g, plan, elide=False)
+    assert low.elided_edges == []
+    assert low.store_specs == {}
+    assert all(lo.in_layout is None and lo.out_layout is None
+               for lo in low.values())
+    assert all(t.reason == "elision disabled"
+               for t in low.transitions.values() if not t.elide)
+
+
+def test_lower_plan_validation_errors(mapped_googlenet):
+    g, plan, _ = mapped_googlenet
+    with pytest.raises(ValueError, match="epilogue"):
+        lower_plan(g, plan, epilogue="gelu")
+    with pytest.raises(ValueError, match="backend"):
+        lower_plan(g, plan, backend="cuda")
+    with pytest.raises(ValueError, match="not an edge"):
+        lower_plan(g, plan, elide_overrides={(999, 1000): False})
+    with pytest.raises(ValueError, match="must be bool"):
+        lower_plan(g, plan, elide_overrides={g.edges[0]: "no"})
+    # a tuning record carrying a junk backend fails at lowering, not trace
+    node = g.conv_nodes()[0]
+    rec = TuningRecord({record_key(node.conv): LayerTuning(
+        binding=Binding("im2col", "NS", 128, 128, "cuda"),
+        measured_s=0.0, candidates=[])})
+    with pytest.raises(ValueError, match="backend"):
+        lower_plan(g, None, tuning=rec)
+
+
+def test_elide_overrides_flip_single_edges(mapped_googlenet):
+    g, plan, _ = mapped_googlenet
+    low = lower_plan(g, plan)
+    edge = low.elided_edges[0]
+    low2 = lower_plan(g, plan, elide_overrides={edge: False})
+    assert edge not in low2.elided_edges
+    assert not low2.transitions[edge].elide
+    assert "override" in low2.transitions[edge].reason
+    # every other elided edge is untouched
+    assert set(low2.elided_edges) == set(low.elided_edges) - {edge}
+
+
+# ------------------------------------- the (producer, consumer) matrix
+ALGOS = [IM2COL, KN2ROW, WINO_2_3, WINO_4_3]
+
+
+def _two_conv_graph():
+    """input → convA (3×3) → convB (3×3) → output: every algorithm family
+    applies to both layers."""
+    g, cur = _start(12, 4)
+    cur = cur.conv(6, 3, 3, name="convA").conv(5, 3, 3, name="convB")
+    out = g.add_node(LayerKind.OUTPUT, name="output", out_shape=(12, 12, 5))
+    g.add_edge(cur.node, out)
+    return g
+
+
+def _forced_plan(g, assignment):
+    plan = map_network(g)
+    dfs = list(Dataflow)
+    return dataclasses.replace(
+        plan,
+        assignment={nid: algo for nid, algo in assignment.items()},
+        dataflows={nid: dfs[i % 3] for i, nid in enumerate(assignment)})
+
+
+@pytest.mark.parametrize("dst", ALGOS, ids=lambda a: a.key)
+@pytest.mark.parametrize("src", ALGOS, ids=lambda a: a.key)
+def test_transition_matrix_equivalence(src, dst):
+    """All (producer algorithm, consumer algorithm) pairs: the elided
+    compiled plan equals the NHWC-round-trip baseline — layout switching
+    is semantically invisible, like algorithm and dataflow switching."""
+    g = _two_conv_graph()
+    a, b = [n.id for n in g.conv_nodes()]
+    plan = _forced_plan(g, {a: src, b: dst})
+    params = init_params(g, jax.random.PRNGKey(1))
+    xb = rnd(2, 12, 12, 4)
+    lowered = lower_plan(g, plan)
+    want_spec = consumer_spec(dst, g.nodes[b].conv)
+    if not is_nhwc(want_spec):
+        # the chain edge must actually elide for non-trivial formats
+        assert (a, b) in lowered.elided_edges
+        assert lowered[b].in_layout == want_spec
+        assert lowered[a].out_layout == want_spec
+    got = compile_plan(g, plan)(params, xb)
+    base = compile_plan(g, plan, elide=False)(params, xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("algo", [IM2COL, WINO_2_3], ids=lambda a: a.key)
+def test_elided_chain_on_pallas_backend(algo):
+    """The matched-layout kernels (Toeplitz GEMM, tile-domain Winograd)
+    agree with the baseline on the Pallas path too."""
+    g = _two_conv_graph()
+    a, b = [n.id for n in g.conv_nodes()]
+    plan = _forced_plan(g, {a: algo, b: algo})
+    params = init_params(g, jax.random.PRNGKey(2))
+    xb = rnd(2, 12, 12, 4)
+    got = compile_plan(g, plan, use_pallas=True, interpret=True)(params, xb)
+    base = compile_plan(g, plan, elide=False)(params, xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_winograd_chain_stays_in_tile_domain(monkeypatch):
+    """Back-to-back 3×3 Winograd convs: the producer stores the consumer's
+    scattered tile layout and the consumer reads it directly — the edge
+    never round-trips through NHWC."""
+    g = _two_conv_graph()
+    a, b = [n.id for n in g.conv_nodes()]
+    plan = _forced_plan(g, {a: WINO_2_3, b: WINO_2_3})
+    params = init_params(g, jax.random.PRNGKey(3))
+    seen = []
+    real = overlay.apply_conv
+
+    def spy(x, w, algo, *args, **kw):
+        seen.append((x.ndim, kw.get("in_layout"), kw.get("out_layout")))
+        return real(x, w, algo, *args, **kw)
+
+    monkeypatch.setattr(overlay, "apply_conv", spy)
+    run = compile_plan(g, plan)
+    y = run(params, rnd(12, 12, 4))
+    (nd_a, in_a, out_a), (nd_b, in_b, out_b) = seen
+    # the network input arrives NHWC (INPUT edges never store a format);
+    # convA stores convB's tiles, so the inter-layer edge lives in the
+    # scattered domain.
+    assert in_a is None and nd_a == 3
+    assert out_a is not None and out_a.kind == "winograd" and out_a.c == 6
+    assert out_a.m == 2 and out_a.r == 3
+    assert in_b == out_a and out_b is None
+    assert nd_b == 4            # convB received tiles, not an NHWC map
+    # the eager path shares the lowering (and therefore the layouts)
+    x = rnd(12, 12, 4)
+    np.testing.assert_allclose(
+        np.asarray(forward(g, params, x, plan=plan)),
+        np.asarray(run(params, x)), rtol=1e-4, atol=1e-5)
+    assert y.ndim == 3
+
+
+# ------------------------------------------------------- split fan-out
+def _split_graph():
+    """conv0 fans out to two matched im2col 1×1 convs, one kn2row 1×1 conv
+    and a pool — the store-format split vertex case."""
+    g, cur = _start(12, 4)
+    c0 = cur.conv(6, 3, 3, name="conv0")
+    b1 = c0.conv(5, 1, 1, name="b1")
+    b2 = c0.conv(7, 1, 1, name="b2")
+    b3 = c0.conv(4, 1, 1, name="b3")
+    b4 = c0.pool(3, 1, name="pool")
+    cat = _concat(g, [b1, b2, b3, b4], "cat")
+    out = g.add_node(LayerKind.OUTPUT, name="output",
+                     out_shape=(12, 12, 5 + 7 + 4 + 6))
+    g.add_edge(cat.node, out)
+    ids = {n.name: n.id for n in g.nodes.values()}
+    return g, ids
+
+
+def test_split_fanout_materializes_store_format_once(monkeypatch):
+    g, ids = _split_graph()
+    plan = _forced_plan(g, {ids["conv0"]: IM2COL, ids["b1"]: IM2COL,
+                            ids["b2"]: IM2COL, ids["b3"]: KN2ROW})
+    plan = dataclasses.replace(
+        plan, store_formats={ids["conv0"]: Layout.TOEPLITZ})
+    lowered = lower_plan(g, plan)
+    c0 = ids["conv0"]
+    store = lowered.store_specs[c0]
+    assert store.kind == "toeplitz" and store.k1 == 1
+    # matched consumers elide; the kn2row conv and the pool pay the
+    # converting load from the stored Toeplitz matrix
+    assert lowered.transitions[(c0, ids["b1"])].elide
+    assert lowered.transitions[(c0, ids["b2"])].elide
+    t3 = lowered.transitions[(c0, ids["b3"])]
+    tp = lowered.transitions[(c0, ids["pool"])]
+    assert not t3.elide and t3.layout == store
+    assert not tp.elide and tp.layout == store
+
+    params = init_params(g, jax.random.PRNGKey(4))
+    xb = rnd(3, 12, 12, 4)
+    seen = []
+    real = overlay.apply_conv
+
+    def spy(x, w, algo, *args, **kw):
+        seen.append((x.ndim, kw.get("in_layout"), kw.get("out_layout")))
+        return real(x, w, algo, *args, **kw)
+
+    monkeypatch.setattr(overlay, "apply_conv", spy)
+    got = compile_plan(g, plan)(params, xb)
+    base = compile_plan(g, plan, elide=False)(params, xb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-5)
+    # trace order is topological: conv0, b1, b2, b3
+    assert seen[0][2] == store                     # conv0 stores Toeplitz
+    assert seen[1][1] == store and seen[2][1] == store
+    assert seen[1][0] == 3                         # batched Toeplitz rank
+    assert seen[3][1] is None                      # kn2row restored NHWC
+
+
+def test_split_tensor3d_store_keeps_nhwc():
+    """When the PBQP picks the 3-D tensor store at a split, nothing is
+    materialized: kn2row/pool consumers match trivially, im2col consumers
+    keep the round trip (and say why)."""
+    g, ids = _split_graph()
+    plan = _forced_plan(g, {ids["conv0"]: IM2COL, ids["b1"]: IM2COL,
+                            ids["b2"]: IM2COL, ids["b3"]: KN2ROW})
+    plan = dataclasses.replace(
+        plan, store_formats={ids["conv0"]: Layout.TENSOR3D})
+    lowered = lower_plan(g, plan)
+    c0 = ids["conv0"]
+    assert c0 not in lowered.store_specs
+    assert lowered.transitions[(c0, ids["b3"])].elide     # matched 3-D
+    assert lowered.transitions[(c0, ids["pool"])].elide
+    t1 = lowered.transitions[(c0, ids["b1"])]
+    assert not t1.elide and "NHWC" in t1.reason
+
+
+# --------------------------------------------- report + measured loop
+def test_transition_report_and_calibration(mapped_googlenet):
+    g, plan, _ = mapped_googlenet
+    lowered = lower_plan(g, plan)
+    rep = transition_report(g, lowered)
+    conv_ids = {n.id for n in g.conv_nodes()}
+    want = [(u, v) for (u, v) in lowered.elided_edges if v in conv_ids]
+    assert rep["n_elided"] == len(want) > 0
+    assert rep["predicted_saving_s"] > 0
+    assert rep["predicted_roundtrip_s"] > rep["predicted_elided_s"]
+    # the measured-calibration hook scales every transition pair
+    cal = TransitionCalibration(default=2.0)
+    rep2 = transition_report(g, lowered, calibration=cal)
+    np.testing.assert_allclose(rep2["predicted_saving_s"],
+                               2.0 * rep["predicted_saving_s"], rtol=1e-9)
+
+
+def test_tune_elision_returns_overrides():
+    g = _two_conv_graph()
+    rec = TuningRecord()
+    overrides = tune_elision(g, None, reps=1, record=rec)
+    lowered = lower_plan(g, None)
+    assert set(overrides) <= set(lowered.elided_edges)
+    assert all(v is False for v in overrides.values())
+    assert elision_overrides_from_meta(rec) == overrides
+    # overrides feed straight back into lowering
+    lowered2 = lower_plan(g, None, elide_overrides=overrides)
+    assert set(lowered2.elided_edges) == \
+        set(lowered.elided_edges) - set(overrides)

@@ -58,7 +58,10 @@ def mixed_plan(mapped_googlenet):
 
 def _lax_forward(graph, params, x):
     """Reference executor: same graph walk, conv replaced by lax.conv.
-    Must honor the fused ``epilogue`` the executor now hands every conv."""
+    Must honor the fused ``epilogue`` the executor now hands every conv;
+    ``overlay.nhwc_conv`` adapts the NHWC oracle to the layout-carrying
+    call contract (the executor may hand it a staged store format)."""
+    @overlay.nhwc_conv
     def lax_conv(xi, w, algo, dataflow=Dataflow.NS, p1=128, p2=128, *,
                  stride=1, padding="SAME", epilogue="none", bias=None, **kw):
         y = conv_ref(xi, w, stride=stride, padding=padding)
