@@ -22,6 +22,7 @@ def main() -> None:
     import benchmarks.bench_fused_autotune as bf
     import benchmarks.bench_layout_elision as bl
     import benchmarks.bench_roofline as br
+    import benchmarks.bench_sharded_serving as bs
     import benchmarks.bench_utilization as bu
 
     results = {}
@@ -30,6 +31,7 @@ def main() -> None:
                       ("bench_fused_autotune", bf),
                       ("bench_layout_elision", bl),
                       ("bench_dynamic_batching", bdb),
+                      ("bench_sharded_serving", bs),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

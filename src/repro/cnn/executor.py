@@ -17,7 +17,9 @@ Two execution modes:
   ONE ``jax.jit``-compiled program per (graph, plan) with no Python dispatch
   on the hot path. The compiled program is batched: it accepts ``(H, W, C)``
   or ``(B, H, W, C)`` inputs, so it can serve batched traffic directly
-  (see ``serving.cnn_engine.CNNServingEngine``).
+  (see ``serving.cnn_engine.CNNServingEngine``). With ``mesh=`` the batch
+  dimension additionally shards across a device mesh's data axes
+  (params replicated) — same lowered program, multi-chip placement.
 """
 from __future__ import annotations
 
@@ -225,7 +227,8 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  tuning_batch: Optional[int] = None,
                  avg_pool_via: str = "jnp",
                  elide: bool = True,
-                 elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None
+                 elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None,
+                 mesh=None,
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
@@ -256,15 +259,56 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     bindings measured at that batch size. ``avg_pool_via="overlay"`` routes
     AvgPool layers through the overlay's GEMM unit (§3.4) instead of the
     jnp reduce-window.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) turns on data-parallel multi-chip
+    execution: the batch dimension of ``x`` is placed on the mesh's data
+    axes (``distributed.sharding.data_axes`` — a ``("data",)`` mesh from
+    ``launch.mesh.make_data_mesh`` in the common case) via
+    ``NamedSharding``/``PartitionSpec`` and params are replicated, so every
+    chip runs the SAME lowered overlay program on its batch shard — the
+    algorithm/layout mapping is untouched; only placement changes, which is
+    why sharding composes with tuning, epilogues and layout elision for
+    free. Data-parallel conv inference needs no collectives, so scaling is
+    communication-free up to the output gather. The returned callable then
+    requires batched ``(B, H, W, C)`` input with ``B`` divisible by the
+    data-shard count (jit rejects uneven input partitions); callers keeping
+    params on-device should pre-place them replicated (as
+    ``CNNServingEngine`` does) so the hot path never re-transfers them.
     """
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
                           batch=tuning_batch, elide=elide,
                           elide_overrides=elide_overrides)
 
-    @jax.jit
-    def run(params: Params, x: jax.Array) -> jax.Array:
+    def _run(params: Params, x: jax.Array) -> jax.Array:
         return _eval_graph(graph, lowering, params, x, use_pallas, interpret,
                            avg_pool_via)
 
+    if mesh is None:
+        return jax.jit(_run)
+
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.distributed.sharding import (data_axes, data_shard_count,
+                                            replicated)
+    dp = data_axes(mesh)
+    n_shards = data_shard_count(mesh)
+    batch_axes = dp if dp else None
+    x_sharding = NamedSharding(mesh, PartitionSpec(batch_axes, None, None,
+                                                   None))
+    jitted = jax.jit(_run, in_shardings=(replicated(mesh), x_sharding))
+
+    def run(params: Params, x: jax.Array) -> jax.Array:
+        if x.ndim != 4:
+            raise ValueError(
+                "mesh-sharded compiled plans take batched (B, H, W, C) "
+                f"input; got shape {tuple(x.shape)}")
+        if x.shape[0] % n_shards:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide across "
+                f"{n_shards} data shards — pad to a multiple (the serving "
+                "engine's sharded bucket ladder guarantees this)")
+        return jitted(params, x)
+
+    run.mesh = mesh
+    run.data_shards = n_shards
     return run

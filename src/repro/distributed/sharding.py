@@ -28,6 +28,16 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def data_shard_count(mesh: Mesh) -> int:
+    """Number of ways the batch dimension splits on ``mesh`` — the product
+    of the data-parallel axis sizes (1 when the mesh has no data axes).
+    This is the divisor every data-sharded batch must respect: jit input
+    shardings reject uneven partitions, so batch producers (the CNN
+    serving engine's bucket ladder, the LM input pipeline) size batches in
+    multiples of it."""
+    return _axis_size(mesh, data_axes(mesh) or None)
+
+
 def _path_str(path) -> str:
     out = []
     for p in path:

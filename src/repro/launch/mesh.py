@@ -18,3 +18,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh():
     """1-device mesh with the same axis names, for CPU tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_devices=None):
+    """Pure data-parallel mesh over the first ``n_devices`` devices (all by
+    default) — the CNN serving shape: params are replicated, the batch dim
+    shards on the single "data" axis. One executable per batch bucket stays
+    one executable; only its batch placement changes
+    (``cnn.executor.compile_plan(..., mesh=...)``)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(f"n_devices={n_devices} not in "
+                             f"[1, {len(devices)}]")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), ("data",))

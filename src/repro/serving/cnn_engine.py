@@ -40,13 +40,24 @@ from repro.core.graph import Graph
 from repro.core.mapper import ExecutionPlan
 
 
-def batch_buckets(max_batch: int) -> List[int]:
+def batch_buckets(max_batch: int, shard: int = 1) -> List[int]:
     """Power-of-two bucket ladder up to ``max_batch`` (inclusive — a
-    non-power-of-two cap becomes the top bucket)."""
+    non-power-of-two cap becomes the top bucket). ``shard`` > 1 builds the
+    mesh-sharded ladder: every bucket is a multiple of the data-shard
+    count (``shard``, ``2*shard``, ``4*shard``, ...), so each bucket's
+    padded batch splits evenly across the mesh's data axes — jit input
+    shardings reject uneven partitions, and a bucket a mesh cannot place
+    would be a compile-time landmine. The cap itself must divide."""
     if max_batch < 1:
         raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if shard < 1:
+        raise ValueError(f"shard must be >= 1, got {shard}")
+    if max_batch % shard:
+        raise ValueError(
+            f"max_batch {max_batch} is not a multiple of the data-shard "
+            f"count {shard}; the top bucket could not be placed on the mesh")
     out = []
-    b = 1
+    b = shard
     while b < max_batch:
         out.append(b)
         b *= 2
@@ -93,6 +104,17 @@ class CNNServingEngine:
     ``trace_window`` bounds the per-request ``RequestTrace`` log backing
     the ``stats()`` latency aggregates (totals and SLO-violation counters
     keep counting past the window).
+
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. ``launch.mesh.make_data_mesh``)
+    turns on data-parallel multi-chip serving: every bucket executable is
+    compiled with its batch dimension sharded across the mesh's data axes
+    and params replicated (placed once, at construction). The bucket
+    ladder is then built in multiples of the data-shard count so every
+    padded dispatch splits evenly across chips, and tuning-record lookups
+    key off the *per-chip* batch (``bucket // data_shards``) — a winner
+    measured at per-chip batch N on one chip is exactly the workload each
+    chip runs in a sharded bucket of ``N * data_shards``, so existing
+    single-device records transfer unchanged.
     """
 
     def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
@@ -107,13 +129,30 @@ class CNNServingEngine:
                  tuning=None,
                  clock: Callable[[], float] = time.monotonic,
                  warmup: bool = False,
-                 trace_window: int = 2048) -> None:
+                 trace_window: int = 2048,
+                 mesh=None) -> None:
         self.graph = graph
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed.sharding import (data_shard_count,
+                                                    replicated)
+            self.data_shards = data_shard_count(mesh)
+            # Replicate params across the mesh ONCE — jit would otherwise
+            # re-transfer them to every chip on every tick.
+            params = jax.device_put(params, replicated(mesh))
+        else:
+            self.data_shards = 1
         self.params = params
         self.buckets = (sorted(set(int(b) for b in buckets)) if buckets
-                        else batch_buckets(batch_size))
+                        else batch_buckets(batch_size, self.data_shards))
         if self.buckets[0] < 1:
             raise ValueError(f"buckets must be >= 1, got {self.buckets}")
+        bad = [b for b in self.buckets if b % self.data_shards]
+        if bad:
+            raise ValueError(
+                f"buckets {bad} are not multiples of the mesh's data-shard "
+                f"count {self.data_shards} — their padded batches could "
+                "not be placed")
         self.b = self.buckets[-1]              # largest bucket (PR-2 name)
         self.slo_s = slo_s
         self.dtype = np.dtype(dtype)
@@ -127,12 +166,15 @@ class CNNServingEngine:
         # One executable per bucket: the bucket's tuning winner (measured
         # at that batch size) binds its lowering, so executables genuinely
         # differ — this is the multi-executable cache the fixed-batch
-        # engine could not have.
+        # engine could not have. Under a mesh, each chip runs a per-chip
+        # slice of the bucket, so the tuning lookup keys off that per-chip
+        # batch — the workload a chip actually executes.
         self._runs = {
             bucket: compile_plan(graph, plan, default_algo=default_algo,
                                  use_pallas=use_pallas, interpret=interpret,
                                  epilogue=epilogue, tuning=tuning,
-                                 tuning_batch=bucket)
+                                 tuning_batch=bucket // self.data_shards,
+                                 mesh=mesh)
             for bucket in self.buckets
         }
         # One staging buffer sized for the largest bucket, allocated ONCE;
@@ -257,7 +299,8 @@ class CNNServingEngine:
                 t_done=now + wall, bucket=bucket, queue_s=queue_s,
                 service_s=wall, latency_s=latency_s, slo_ok=slo_ok))
         self.last_tick = {"bucket": bucket, "served": len(batch),
-                          "wall_s": wall, "now": now}
+                          "wall_s": wall, "now": now,
+                          "per_chip_batch": bucket // self.data_shards}
         return len(batch)
 
     def reset(self) -> None:
@@ -304,6 +347,16 @@ class CNNServingEngine:
             "window": len(window),
             "latency": _agg([t.latency_s for t in window]),
             "queue_wait": _agg([t.queue_s for t in window]),
+            # Sharded dispatch accounting: how each bucket splits across
+            # the mesh (None = single-device engine). Service EMAs above
+            # are wall times of the *sharded* dispatch — the scheduler's
+            # deadline budgets automatically reflect multi-chip speed.
+            "sharding": None if self.mesh is None else {
+                "data_shards": self.data_shards,
+                "mesh_devices": int(self.mesh.size),
+                "per_chip_batch": {b: b // self.data_shards
+                                   for b in self.buckets},
+            },
         }
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:

@@ -1,0 +1,231 @@
+"""Mesh-sharded compiled plans + multi-chip serving engine (PR 5).
+
+The mesh path changes *placement*, never math: a compiled plan with
+``mesh=`` shards the batch dim across the mesh's data axes with params
+replicated, so outputs must equal the single-device program bucket for
+bucket. Pinned here: that equivalence, the shard-divisible bucket ladder,
+stale-slot zeroing across sharded bucket switches, per-chip tuning-record
+lookups, and the engine's sharded ``stats()`` accounting.
+
+Multi-device cases need 8 simulated devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — CI's
+sharded-smoke job sets it; under plain tier-1 they skip). The 1-device
+mesh cases run everywhere, so the sharded code path itself can never rot
+unnoticed between sharded-smoke runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.executor import compile_plan, forward, init_params
+from repro.cnn.models import vgg16
+from repro.core.autotune import Binding, LayerTuning, TuningRecord, record_key
+from repro.distributed.sharding import data_shard_count
+from repro.launch.mesh import make_data_mesh
+from repro.serving.cnn_engine import (CNNRequest, CNNServingEngine,
+                                      batch_buckets)
+
+NEED8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+RNG = np.random.default_rng(23)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = vgg16(res=8, scale=0.05)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, params
+
+
+def imgs(n):
+    return np.asarray(RNG.standard_normal((n, 8, 8, 3)), np.float32)
+
+
+def submit_n(eng, n, start_rid=0):
+    reqs = [CNNRequest(rid=start_rid + i, image=img)
+            for i, img in enumerate(imgs(n))]
+    for r in reqs:
+        eng.submit(r)
+    return reqs
+
+
+# -------------------------------------------------- sharded bucket ladder
+def test_sharded_bucket_ladder():
+    assert batch_buckets(8, 1) == [1, 2, 4, 8]     # shard=1 = PR-3 ladder
+    assert batch_buckets(8, 2) == [2, 4, 8]
+    assert batch_buckets(8, 4) == [4, 8]
+    assert batch_buckets(8, 8) == [8]
+    assert batch_buckets(24, 4) == [4, 8, 16, 24]  # non-pow2 cap = top
+    with pytest.raises(ValueError, match="multiple"):
+        batch_buckets(6, 4)                        # cap must divide
+    with pytest.raises(ValueError, match="shard"):
+        batch_buckets(8, 0)
+
+
+def test_mesh_helpers():
+    mesh = make_data_mesh(1)
+    assert mesh.axis_names == ("data",)
+    assert data_shard_count(mesh) == 1
+    with pytest.raises(ValueError, match="n_devices"):
+        make_data_mesh(jax.device_count() + 1)
+
+
+# ------------------------------------------- single-device mesh (runs always)
+def test_mesh1_compiled_plan_matches_unsharded(tiny):
+    """A 1-device mesh exercises the whole sharded lowering path (jit
+    in_shardings, replication, input validation) on plain tier-1 hosts."""
+    g, params = tiny
+    run_m = compile_plan(g, None, mesh=make_data_mesh(1))
+    run_s = compile_plan(g, None)
+    assert run_m.data_shards == 1
+    x = imgs(4)
+    np.testing.assert_allclose(np.asarray(run_m(params, x)),
+                               np.asarray(run_s(params, x)),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="batched"):
+        run_m(params, x[0])                        # mesh mode needs (B,…)
+
+
+def test_mesh1_engine_serves_and_accounts(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=4,
+                           mesh=make_data_mesh(1))
+    assert eng.buckets == [1, 2, 4]
+    reqs = submit_n(eng, 3)
+    assert eng.step() == 3
+    assert eng.last_tick["per_chip_batch"] == 4
+    sh = eng.stats()["sharding"]
+    assert sh == {"data_shards": 1, "mesh_devices": 1,
+                  "per_chip_batch": {1: 1, 2: 2, 4: 4}}
+    for r in reqs:
+        want = forward(g, params, jnp.asarray(r.image))
+        np.testing.assert_allclose(eng.done[r.rid], np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------- 8-device equivalence
+@NEED8
+@pytest.mark.parametrize("devices", [2, 4, 8])
+def test_sharded_outputs_match_single_device_per_bucket(tiny, devices):
+    """The §3 invariant extends across placement: every bucket of the
+    sharded ladder produces outputs allclose to the SAME lowering compiled
+    without a mesh."""
+    g, params = tiny
+    mesh = make_data_mesh(devices)
+    run_s = compile_plan(g, None)
+    run_m = compile_plan(g, None, mesh=mesh)
+    for bucket in batch_buckets(8, devices):
+        x = imgs(bucket)
+        np.testing.assert_allclose(np.asarray(run_m(params, x)),
+                                   np.asarray(run_s(params, x)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@NEED8
+def test_sharded_batch_divisibility_rejected(tiny):
+    g, params = tiny
+    run_m = compile_plan(g, None, mesh=make_data_mesh(4))
+    assert run_m.data_shards == 4
+    with pytest.raises(ValueError, match="data shards"):
+        run_m(params, imgs(6))                     # 6 % 4 != 0
+
+
+@NEED8
+def test_sharded_engine_ladder_and_bucket_validation(tiny):
+    g, params = tiny
+    mesh = make_data_mesh(4)
+    eng = CNNServingEngine(g, params, None, batch_size=8, mesh=mesh)
+    assert eng.buckets == [4, 8]
+    assert eng.data_shards == 4
+    with pytest.raises(ValueError, match="data-shard"):
+        CNNServingEngine(g, params, None, buckets=(2, 8), mesh=mesh)
+    with pytest.raises(ValueError, match="multiple"):
+        CNNServingEngine(g, params, None, batch_size=6, mesh=mesh)
+
+
+@NEED8
+def test_sharded_stale_slot_zeroing_across_bucket_switches(tiny):
+    """A bucket-8 tick then a padded bucket-4 tick: the smaller sharded
+    dispatch must zero the slots the larger one staged — a stale image
+    leaking into the padded tail would land on shard 2+ and corrupt
+    nothing visible except under sharding, which is exactly why this is
+    pinned at 8 devices."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=8,
+                           mesh=make_data_mesh(4))
+    buf0 = eng._batch_buf
+    reqs = submit_n(eng, 8)
+    assert eng.step() == 8
+    assert eng.last_tick["bucket"] == 8
+    reqs += submit_n(eng, 2, start_rid=8)          # pads into bucket 4
+    assert eng.step(flush=True) == 2
+    assert eng.last_tick["bucket"] == 4
+    assert eng.last_tick["per_chip_batch"] == 1
+    assert eng._batch_buf is buf0                  # one staging buffer, ever
+    np.testing.assert_array_equal(eng._batch_buf[2:], 0)
+    for r in reqs:
+        want = forward(g, params, jnp.asarray(r.image))
+        np.testing.assert_allclose(eng.done[r.rid], np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@NEED8
+def test_sharded_engine_stats_accounting(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=8,
+                           mesh=make_data_mesh(2))
+    submit_n(eng, 5)
+    assert eng.step(flush=True) == 5               # bucket 8 (covers 5)
+    s = eng.stats()
+    assert s["sharding"] == {"data_shards": 2, "mesh_devices": 2,
+                             "per_chip_batch": {2: 1, 4: 2, 8: 4}}
+    assert s["dispatches"] == {2: 0, 4: 0, 8: 1}
+    assert s["served"] == 5 and s["window"] == 5
+    assert set(s["service_ema_s"]) == {8}          # sharded wall time EMA
+    for tr in eng.request_log:
+        assert tr.bucket == 8
+
+
+@NEED8
+def test_sharded_tuning_lookup_keys_off_per_chip_batch(tiny):
+    """With 4 data shards, bucket 4 runs per-chip batch 1 and bucket 8
+    per-chip batch 2 — so a record tuned at per-chip buckets {1, 2} must
+    bind backend-distinct lowerings, proving single-device tuning records
+    transfer to sharded serving unchanged."""
+    g, params = tiny
+    entries = {}
+    for node in g.conv_nodes():
+        entries[record_key(node.conv, 1)] = LayerTuning(
+            binding=Binding("im2col", "NS", 128, 128, "reference"),
+            measured_s=1.0, candidates=[], batch=1)
+        entries[record_key(node.conv, 2)] = LayerTuning(
+            binding=Binding("im2col", "NS", 128, 128, "lax"),
+            measured_s=1.0, candidates=[], batch=2)
+    rec = TuningRecord(entries)
+    from repro.cnn import overlay
+    seen = []
+    real = overlay.apply_conv
+
+    def spy(x, w, *a, **kw):
+        seen.append(kw.get("backend"))
+        return real(x, w, *a, **kw)
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(overlay, "apply_conv", spy)
+        eng = CNNServingEngine(g, params, None, batch_size=8, tuning=rec,
+                               mesh=make_data_mesh(4))
+        assert eng.buckets == [4, 8]
+        reqs = submit_n(eng, 8)
+        assert eng.step() == 8                     # traces bucket 8 → b2
+        reqs += submit_n(eng, 4, start_rid=8)
+        assert eng.step() == 4                     # traces bucket 4 → b1
+    n_conv = len(g.conv_nodes())
+    assert seen[:n_conv] == ["lax"] * n_conv
+    assert seen[n_conv:] == ["reference"] * n_conv
+    for r in reqs:
+        want = forward(g, params, jnp.asarray(r.image))
+        np.testing.assert_allclose(eng.done[r.rid], np.asarray(want),
+                                   rtol=2e-2, atol=2e-3)
