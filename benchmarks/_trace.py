@@ -1,0 +1,110 @@
+"""Shared Poisson arrival-trace machinery for the serving benchmarks.
+
+One copy of the trace generator and the two replay disciplines, used by
+``bench_dynamic_batching`` (virtual clock), ``bench_sharded_serving``
+(virtual clock per device count) and ``bench_pipelined_serving`` (real
+clock — overlap only exists in real time):
+
+* ``poisson_trace`` — deterministic Poisson arrivals + images per seed.
+* ``replay`` — virtual-clock discrete events: arrivals carry synthetic
+  timestamps, every tick runs the REAL compiled program and its measured
+  wall time advances the clock, so per-request latency combines real
+  service time with simulated queueing. Blind to pipelining by design
+  (the virtual clock serializes ticks).
+* ``replay_wallclock`` — real-clock events: arrivals are released as
+  real time passes and the engine runs free, so host-side packing and
+  device compute genuinely overlap when the engine pipelines. This is
+  the only replay that can observe ``pipeline_depth`` > 1.
+* ``hist`` — the per-bucket dispatch histogram row value.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
+
+
+def poisson_trace(
+    rate_rps: float, n: int, shape: Tuple[int, ...], seed: int
+) -> List[Tuple[float, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    times = np.cumsum(gaps) - gaps[0]  # first arrival at t=0
+    imgs = rng.standard_normal((n,) + shape).astype(np.float32)
+    return [(float(times[i]), imgs[i]) for i in range(n)]
+
+
+def replay(
+    eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]]
+) -> Tuple[np.ndarray, float]:
+    """Virtual-clock discrete-event replay: submit arrivals at their trace
+    timestamps, let the engine's tick scheduler decide dispatches, advance
+    the clock by each tick's measured wall time. Returns (per-request
+    latencies, makespan)."""
+    n = len(trace)
+    done_at: Dict[int, float] = {}
+    i, now = 0, 0.0
+    while len(done_at) < n:
+        while i < n and trace[i][0] <= now + 1e-12:
+            eng.submit(
+                CNNRequest(rid=i, image=trace[i][1], t_submit=trace[i][0])
+            )
+            i += 1
+        served = eng.step(now=now)
+        if served:
+            wall = float(eng.last_tick["wall_s"])
+            for rid in eng.done:
+                if rid not in done_at:
+                    done_at[rid] = now + wall
+            now += wall  # the engine is busy while a tick runs
+            continue
+        nxt = []
+        if i < n:
+            nxt.append(trace[i][0])
+        at = eng.next_dispatch_at()
+        if at is not None:
+            nxt.append(at)
+        assert nxt, "replay stalled with requests outstanding"
+        now = max(now, min(nxt))
+    lat = np.array([done_at[rid] - trace[rid][0] for rid in range(n)])
+    makespan = max(done_at.values()) - trace[0][0]
+    return lat, makespan
+
+
+def replay_wallclock(
+    eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]]
+) -> Tuple[np.ndarray, float]:
+    """Real-clock replay: arrivals are released as wall time passes and
+    the engine ticks continuously, so a pipelined engine's dispatch of
+    tick N+1 really does overlap tick N's device compute — the overlap a
+    virtual clock cannot express. Returns (per-request latencies from the
+    engine's own RequestTrace log, real makespan). The engine should be
+    warmed (compiles inside the replay would poison the measurement) and
+    is reset()-safe to reuse across calls."""
+    n = len(trace)
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < n and trace[i][0] <= now:
+            eng.submit(CNNRequest(rid=i, image=trace[i][1], t_submit=now))
+            i += 1
+        # Once every arrival is in, flush: remaining ticks should drain
+        # back-to-back rather than wait on SLO budgets.
+        dispatched = eng.step(now=now, flush=i >= n)
+        if i >= n and not eng.queue:
+            break
+        if not dispatched and i < n:
+            time.sleep(min(1e-3, max(0.0, trace[i][0] - now)))
+    eng.drain()
+    makespan = time.perf_counter() - t0
+    lat = np.array([t.latency_s for t in eng.request_log][-n:])
+    return lat, makespan
+
+
+def hist(eng: CNNServingEngine) -> str:
+    return "|".join(f"{b}:{c}" for b, c in sorted(eng.dispatches.items()) if c)

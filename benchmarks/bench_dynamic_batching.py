@@ -11,10 +11,11 @@ policies over the same compiled-overlay stack:
   the oldest request has deadline budget, dispatch early when it is
   nearly spent).
 
-The replay is a virtual-clock discrete-event loop: arrivals carry
-synthetic timestamps, every tick runs the REAL compiled program and its
-measured wall time advances the clock — so per-request latency combines
-real service time with simulated queueing. Rows record p50/p99 latency
+The replay is a virtual-clock discrete-event loop (shared machinery in
+``benchmarks/_trace.py``): arrivals carry synthetic timestamps, every
+tick runs the REAL compiled program and its measured wall time advances
+the clock — so per-request latency combines real service time with
+simulated queueing. Rows record p50/p99 latency
 and served throughput per (rate, policy), plus summary comparisons:
 ``bucketed_slo`` must beat ``fixed8`` p99 at the low rate and match its
 throughput (>= 90%) at saturation.
@@ -28,65 +29,27 @@ from __future__ import annotations
 
 import sys
 import time
-from typing import Dict, List, Optional, Tuple
+from pathlib import Path
+from typing import Dict, List, Optional
+
+REPO = Path(__file__).resolve().parents[1]
+for _p in (str(REPO), str(REPO / "src")):  # direct `python benchmarks/…`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._trace import hist as _hist
+from benchmarks._trace import poisson_trace as _poisson_trace
+from benchmarks._trace import replay as _replay
 from repro.cnn.executor import forward, init_params
 from repro.cnn.models import googlenet, vgg16
 from repro.core.autotune import TuningRecord, autotune_buckets
 from repro.core.dse import identify_parameters
 from repro.core.mapper import map_network
-from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
-
-
-def _poisson_trace(
-    rate_rps: float, n: int, shape: Tuple[int, ...], seed: int
-) -> List[Tuple[float, np.ndarray]]:
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate_rps, size=n)
-    times = np.cumsum(gaps) - gaps[0]  # first arrival at t=0
-    imgs = rng.standard_normal((n,) + shape).astype(np.float32)
-    return [(float(times[i]), imgs[i]) for i in range(n)]
-
-
-def _replay(
-    eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]]
-) -> Tuple[np.ndarray, float]:
-    """Virtual-clock discrete-event replay: submit arrivals at their trace
-    timestamps, let the engine's tick scheduler decide dispatches, advance
-    the clock by each tick's measured wall time. Returns (per-request
-    latencies, makespan)."""
-    n = len(trace)
-    done_at: Dict[int, float] = {}
-    i, now = 0, 0.0
-    while len(done_at) < n:
-        while i < n and trace[i][0] <= now + 1e-12:
-            eng.submit(
-                CNNRequest(rid=i, image=trace[i][1], t_submit=trace[i][0])
-            )
-            i += 1
-        served = eng.step(now=now)
-        if served:
-            wall = float(eng.last_tick["wall_s"])
-            for rid in eng.done:
-                if rid not in done_at:
-                    done_at[rid] = now + wall
-            now += wall  # the engine is busy while a tick runs
-            continue
-        nxt = []
-        if i < n:
-            nxt.append(trace[i][0])
-        at = eng.next_dispatch_at()
-        if at is not None:
-            nxt.append(at)
-        assert nxt, "replay stalled with requests outstanding"
-        now = max(now, min(nxt))
-    lat = np.array([done_at[rid] - trace[rid][0] for rid in range(n)])
-    makespan = max(done_at.values()) - trace[0][0]
-    return lat, makespan
+from repro.serving.cnn_engine import CNNServingEngine
 
 
 def _engines(
@@ -102,10 +65,6 @@ def _engines(
         g, params, None, batch_size=8, tuning=record, warmup=True
     )
     return {"fixed8": fixed, "bucketed_slo": bucketed}
-
-
-def _hist(eng: CNNServingEngine) -> str:
-    return "|".join(f"{b}:{c}" for b, c in sorted(eng.dispatches.items()) if c)
 
 
 def _rate_rows(

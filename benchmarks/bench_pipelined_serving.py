@@ -1,0 +1,222 @@
+"""Pipelined overlap-aware serving benchmark (PR 6).
+
+Replays the PR-3 Poisson arrival trace through ``CNNServingEngine`` at
+pipeline depths {1, 2, 4} — depth 1 is the synchronous engine, depth >= 2
+launches ticks asynchronously with double-buffered staging and donated
+device inputs, retiring results lazily. Because overlap only exists in
+real time, the replay here is the *wall-clock* discipline
+(``_trace.replay_wallclock``): arrivals are released as real time passes
+and the engine ticks continuously, so tick N+1's host-side packing
+genuinely overlaps tick N's device compute. Three row groups:
+
+* ``equiv`` — the same burst of requests pushed through depth-1 and
+  depth-{2,4} engines dispatches the identical (bucket, batch) sequence,
+  and per-request outputs must be **bitwise identical**
+  (``np.array_equal``): async dispatch, buffer rotation and donation
+  change scheduling and memory reuse, never math. Gated on every run,
+  including ``--smoke``.
+* ``replay`` — throughput/latency per depth on the raw engine. On a
+  2-core CPU host device compute and host packing share the same cores,
+  so the honest expectation is parity: the committed
+  ``no_slower_depth2`` gate asserts throughput(depth 2) >= 0.90 ×
+  throughput(depth 1) — the same envelope the layout and sharding
+  benches use for shared-host noise — i.e. pipelining must cost nothing
+  where it cannot win.
+* ``delay`` — the same replay with an injected per-tick device delay
+  (``device_delay_s`` = 2× the measured top-bucket service time),
+  emulating a real accelerator whose compute the host does NOT share
+  cores with. Sleeping releases the host, so the next tick's packing
+  AND compute hide inside the current tick's delay window: the
+  committed ``overlap_wins_under_delay`` gate asserts
+  throughput(depth 2) > 1.15 × throughput(depth 1) in this
+  configuration (ideal is ~2×: the synchronous engine pays the full
+  delay per tick, depth 2 completes two ticks per delay).
+
+``--smoke`` (CI serving-smoke job) runs the tiny-graph variant and gates
+only output equivalence — wall-clock ratios on seconds-scale smoke runs
+are scheduling noise, so the perf gates are enforced on the committed
+full-run rows by the CI schema guard instead.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+REPO = Path(__file__).resolve().parents[1]
+for _p in (str(REPO), str(REPO / "src")):     # direct `python benchmarks/…`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+from benchmarks._trace import hist, poisson_trace, replay_wallclock
+from repro.cnn.executor import init_params
+from repro.cnn.models import googlenet, vgg16
+from repro.core.dse import identify_parameters
+from repro.core.mapper import map_network
+from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
+
+DEPTHS = (1, 2, 4)
+# Same 10% envelope (and rationale) as bench_layout_elision/_sharded:
+# same-program process-to-process variance exceeds 5% on shared-CPU
+# hosts, so tighter no-slower margins would gate on scheduling luck.
+NO_SLOWER_ENVELOPE = 0.90
+# The injected-delay configuration emulates a device the host does not
+# share cores with; depth 2 must win by strictly more than this.
+DELAY_SPEEDUP_GATE = 1.15
+ROW_PREFIX = "pipelined_serving,"
+
+
+def _mk_engine(g, params, plan, batch, depth, delay_s=0.0):
+    return CNNServingEngine(g, params, plan, batch_size=batch,
+                            pipeline_depth=depth, device_delay_s=delay_s,
+                            warmup=True)
+
+
+def _equiv_rows(tag: str, g, params, plan, batch: int,
+                n: int) -> List[str]:
+    """Burst-drain the same requests through every depth; per-request
+    outputs must be bitwise identical to the synchronous engine's (the
+    dispatch sequence is deterministic: all requests queued up front +
+    flush ticks ⇒ identical (bucket, batch) splits at every depth)."""
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+    rng = np.random.default_rng(3)
+    imgs = rng.standard_normal((n,) + shape).astype(np.float32)
+    outs: Dict[int, Dict[int, np.ndarray]] = {}
+    for depth in DEPTHS:
+        eng = _mk_engine(g, params, plan, batch, depth)
+        for i in range(n):
+            eng.submit(CNNRequest(rid=i, image=imgs[i]))
+        done = eng.run_until_done()
+        outs[depth] = {rid: np.asarray(v) for rid, v in done.items()}
+        assert len(outs[depth]) == n
+    rows, all_ok = [], True
+    for depth in DEPTHS[1:]:
+        ok = all(np.array_equal(outs[1][r], outs[depth][r])
+                 for r in range(n))
+        all_ok &= ok
+        rows.append(f"pipelined_serving,{tag},equiv,depth_{depth},"
+                    f"outputs_identical,{ok}")
+    rows.append(f"pipelined_serving,{tag},summary,-,outputs_ok,{all_ok}")
+    return rows
+
+
+def _replay_depths(tag: str, g, params, plan, batch: int, trace,
+                   group: str, delay_s: float,
+                   reps: int) -> Dict[int, float]:
+    """One warmed engine per depth, the same trace replayed ``reps`` times
+    each; best-of-reps throughput per depth (min-wall estimator — ambient
+    load only ever slows a replay down). Returns {depth: rps} and appends
+    per-depth rows via the returned dict's consumer."""
+    self_rows: List[str] = []
+    tput: Dict[int, float] = {}
+    for depth in DEPTHS:
+        eng = _mk_engine(g, params, plan, batch, depth, delay_s)
+        best_rps, lat_at_best = 0.0, None
+        for _ in range(reps):
+            eng.reset()
+            lat, makespan = replay_wallclock(eng, trace)
+            rps = len(lat) / makespan
+            if rps > best_rps:
+                best_rps, lat_at_best = rps, lat
+        st = eng.stats()
+        pre = f"pipelined_serving,{tag},depth_{depth},{group}"
+        self_rows.append(f"{pre},throughput_rps,{best_rps:.2f}")
+        self_rows.append(
+            f"{pre},p50_ms,"
+            f"{float(np.percentile(lat_at_best, 50)) * 1e3:.2f}")
+        self_rows.append(
+            f"{pre},p99_ms,"
+            f"{float(np.percentile(lat_at_best, 99)) * 1e3:.2f}")
+        self_rows.append(f"{pre},served,{len(lat_at_best)}")
+        self_rows.append(f"{pre},dispatch_hist,{hist(eng)}")
+        self_rows.append(f"{pre},overlap_ratio,"
+                         f"{st['pipeline']['overlap_ratio']:.3f}")
+        tput[depth] = best_rps
+    tput["rows"] = self_rows            # piggyback (consumed by run())
+    return tput
+
+
+def _measure(smoke: bool) -> List[str]:
+    if smoke:
+        tag, g = "vgg16_r8_smoke", vgg16(res=8, scale=0.05)
+        plan, batch, n_requests, reps = None, 4, 24, 2
+    else:
+        tag, g = "googlenet_r56", googlenet(res=56, scale=0.25)
+        hw = identify_parameters(g, max_dim=512)
+        plan = map_network(g, hw=hw)
+        batch, n_requests, reps = 8, 96, 3
+    params = init_params(g, jax.random.PRNGKey(0))
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+
+    rows = [f"pipelined_serving,{tag},config,-,batch,{batch}",
+            f"pipelined_serving,{tag},config,-,n_requests,{n_requests}",
+            f"pipelined_serving,{tag},config,-,depths,"
+            f"{'|'.join(str(d) for d in DEPTHS)}"]
+
+    # ---- equivalence (the hard gate, every run) ------------------------
+    rows += _equiv_rows(tag, g, params, plan, batch, n_requests)
+
+    # ---- offered load: 1.5x the saturation of the synchronous engine ---
+    # Above saturation the queue backlogs, so every depth dispatches
+    # continuously and throughput measures the tick pipeline itself, not
+    # arrival gaps.
+    probe = _mk_engine(g, params, plan, batch, 1)
+    svc_top = probe.service_estimate(batch)
+    rate = 1.5 * batch / svc_top
+    trace = poisson_trace(rate, n_requests, shape, seed=42)
+    rows.append(f"pipelined_serving,{tag},config,-,"
+                f"svc_ms_top,{svc_top * 1e3:.2f}")
+    rows.append(f"pipelined_serving,{tag},config,-,arrival_rps,{rate:.2f}")
+
+    # ---- raw replay per depth ------------------------------------------
+    raw = _replay_depths(tag, g, params, plan, batch, trace,
+                         "replay", 0.0, reps)
+    rows += raw.pop("rows")
+
+    # ---- injected-device-delay replay per depth ------------------------
+    # Delay = 2x the measured per-tick service time, same saturated
+    # trace: the synchronous engine pays max(compute, delay) = the full
+    # delay per tick (its compute hides inside the block), while at
+    # depth 2 the NEXT tick is packed, launched and computed during the
+    # current tick's delay window — two completions per delay, ideal
+    # speedup ~2x. A delay <= the compute time would hide entirely
+    # inside the block at every depth and prove nothing.
+    delay_s = 2.0 * svc_top
+    rows.append(f"pipelined_serving,{tag},config,-,"
+                f"device_delay_ms,{delay_s * 1e3:.2f}")
+    dly = _replay_depths(tag, g, params, plan, batch, trace,
+                         "delay", delay_s, reps)
+    rows += dly.pop("rows")
+
+    # ---- summary gates -------------------------------------------------
+    for d in DEPTHS[1:]:
+        rows.append(f"pipelined_serving,{tag},summary,-,"
+                    f"tput_ratio_{d}_over_1,{raw[d] / raw[1]:.3f}")
+        rows.append(f"pipelined_serving,{tag},summary,-,"
+                    f"delay_tput_ratio_{d}_over_1,{dly[d] / dly[1]:.3f}")
+    no_slower = raw[2] >= NO_SLOWER_ENVELOPE * raw[1]
+    delay_win = dly[2] > DELAY_SPEEDUP_GATE * dly[1]
+    rows.append(f"pipelined_serving,{tag},summary,-,"
+                f"no_slower_depth2,{no_slower}")
+    rows.append(f"pipelined_serving,{tag},summary,-,"
+                f"overlap_wins_under_delay,{delay_win}")
+    return rows
+
+
+def run(smoke: bool = False) -> List[str]:
+    return _measure(smoke)
+
+
+if __name__ == "__main__":
+    out = run(smoke="--smoke" in sys.argv)
+    print("\n".join(out))
+    # Equivalence gates every invocation (including --smoke); the
+    # wall-clock throughput gates are only enforced for the committed
+    # full-run rows (CI schema guard) — smoke-scale replays on shared CI
+    # hosts are scheduling noise.
+    if any(row.endswith("outputs_ok,False") for row in out):
+        sys.exit(1)

@@ -70,8 +70,9 @@ def _measure(smoke: bool) -> List[str]:
     import numpy as np
 
     from benchmarks._timing import sampled_interleaved
-    from benchmarks.bench_dynamic_batching import (_hist, _poisson_trace,
-                                                   _replay)
+    from benchmarks._trace import hist as _hist
+    from benchmarks._trace import poisson_trace as _poisson_trace
+    from benchmarks._trace import replay as _replay
     from repro.cnn.executor import compile_plan, init_params
     from repro.cnn.models import googlenet, vgg16
     from repro.core.autotune import autotune_buckets

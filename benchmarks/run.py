@@ -21,6 +21,7 @@ def main() -> None:
     import benchmarks.bench_e2e as be
     import benchmarks.bench_fused_autotune as bf
     import benchmarks.bench_layout_elision as bl
+    import benchmarks.bench_pipelined_serving as bp
     import benchmarks.bench_roofline as br
     import benchmarks.bench_sharded_serving as bs
     import benchmarks.bench_utilization as bu
@@ -32,6 +33,7 @@ def main() -> None:
                       ("bench_layout_elision", bl),
                       ("bench_dynamic_batching", bdb),
                       ("bench_sharded_serving", bs),
+                      ("bench_pipelined_serving", bp),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

@@ -15,6 +15,12 @@ mesh's data axis, the bucket ladder is built in multiples of the shard
 count, and tuning lookups key off the per-chip batch — the same record
 works at any device count.
 
+``--pipeline-depth 2`` turns on async tick dispatch: ``step()`` launches
+and returns without blocking (double-buffered staging, donated device
+inputs), results retire lazily, and the completion loop must ``drain()``
+once everything is dispatched — results may still be in flight when the
+queue empties.
+
 CI's serving-smoke job runs the ``--smoke`` configuration end to end.
 """
 import argparse
@@ -59,6 +65,8 @@ def main() -> None:
     ap.add_argument("--slo-ms", type=float, default=250.0)
     ap.add_argument("--devices", type=int, default=None,
                     help="mesh size (default: all visible devices)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="async tick pipeline depth (1 = synchronous)")
     ap.add_argument("--record", type=str, default=None,
                     help="tuning-record JSON: loaded if it exists, else "
                          "autotuned and saved there")
@@ -88,7 +96,8 @@ def main() -> None:
     mesh = make_data_mesh(n_dev) if n_dev > 1 else None
     eng = CNNServingEngine(g, params, plan, batch_size=args.batch,
                            slo_s=args.slo_ms / 1e3, tuning=record,
-                           mesh=mesh, warmup=True)
+                           mesh=mesh, warmup=True,
+                           pipeline_depth=args.pipeline_depth)
     print(f"bucket ladder: {eng.buckets}"
           + (f" (per-chip {[b // eng.data_shards for b in eng.buckets]})"
              if mesh is not None else ""))
@@ -108,10 +117,12 @@ def main() -> None:
             if rid < args.requests:                # trickle one more in
                 eng.submit(CNNRequest(rid=rid, image=imgs[rid]))
                 rid += 1
-            else:
+            elif eng.queue:                        # waiting on SLO budget
                 at = eng.next_dispatch_at()
                 time.sleep(max(0.0, min(0.05, (at or 0) - eng._clock())))
-                eng.step(flush=rid >= args.requests)
+                eng.step(flush=True)
+            else:            # all dispatched — retire in-flight ticks
+                eng.drain()
 
     # Spot-check one output against the eager reference, then report.
     want = np.asarray(forward(g, params, imgs[0], plan=plan,

@@ -23,6 +23,7 @@ Two execution modes:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -229,6 +230,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  elide: bool = True,
                  elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None,
                  mesh=None,
+                 donate: bool = False,
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
@@ -274,28 +276,41 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     data-shard count (jit rejects uneven input partitions); callers keeping
     params on-device should pre-place them replicated (as
     ``CNNServingEngine`` does) so the hot path never re-transfers them.
+
+    ``donate=True`` threads ``jax.jit(..., donate_argnums=)`` for the
+    batched input ``x``: XLA may reuse its device buffer for outputs and
+    intermediates, so a serving loop that re-stages every tick from host
+    memory (as the pipelined ``CNNServingEngine`` does) holds a constant
+    device footprint across ticks instead of one live input buffer per
+    in-flight dispatch. The donated argument is consumed by the call —
+    never pass a ``jax.Array`` you still need afterwards (host numpy
+    staging buffers are safe: the transfer makes a fresh device copy, and
+    only that copy is donated). Donation composes with ``mesh=``: the
+    input's ``NamedSharding`` pins placement, donation only allows
+    aliasing of the per-chip buffers.
     """
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
                           batch=tuning_batch, elide=elide,
                           elide_overrides=elide_overrides)
+    donate_argnums = (1,) if donate else ()
 
     def _run(params: Params, x: jax.Array) -> jax.Array:
         return _eval_graph(graph, lowering, params, x, use_pallas, interpret,
                            avg_pool_via)
 
     if mesh is None:
-        return jax.jit(_run)
+        return _quiet_donation(jax.jit(_run, donate_argnums=donate_argnums),
+                               donate)
 
-    from jax.sharding import NamedSharding, PartitionSpec
-    from repro.distributed.sharding import (data_axes, data_shard_count,
-                                            replicated)
-    dp = data_axes(mesh)
+    from repro.distributed.sharding import (batch_input_sharding,
+                                            data_shard_count, replicated)
     n_shards = data_shard_count(mesh)
-    batch_axes = dp if dp else None
-    x_sharding = NamedSharding(mesh, PartitionSpec(batch_axes, None, None,
-                                                   None))
-    jitted = jax.jit(_run, in_shardings=(replicated(mesh), x_sharding))
+    x_sharding = batch_input_sharding(mesh)
+    jitted = jax.jit(_run, in_shardings=(replicated(mesh), x_sharding),
+                     donate_argnums=donate_argnums)
+
+    jitted = _quiet_donation(jitted, donate)
 
     def run(params: Params, x: jax.Array) -> jax.Array:
         if x.ndim != 4:
@@ -311,4 +326,25 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
 
     run.mesh = mesh
     run.data_shards = n_shards
+    return run
+
+
+def _quiet_donation(jitted: Callable, donate: bool) -> Callable:
+    """Donation is an *allowance*: when no output of the program can alias
+    the donated input (a CNN's logits never match the image shape), XLA
+    ignores it and jax emits an advisory UserWarning at compile time.
+    That is the expected outcome on such programs — donation still pays
+    off wherever an intermediate or output CAN take the buffer (and on
+    runtimes that reuse donated space for temporaries) — so the advisory
+    is suppressed for donated executables rather than logged once per
+    bucket compile."""
+    if not donate:
+        return jitted
+
+    def run(params: Params, x: jax.Array) -> jax.Array:
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jitted(params, x)
+
     return run

@@ -38,6 +38,25 @@ def data_shard_count(mesh: Mesh) -> int:
     return _axis_size(mesh, data_axes(mesh) or None)
 
 
+def batch_input_sharding(mesh: Mesh, rank: int = 4) -> NamedSharding:
+    """``NamedSharding`` for a rank-``rank`` batched input whose leading
+    dimension splits across the mesh's data axes (every other dimension
+    replicated) — the placement ``compile_plan(mesh=...)`` pins on its
+    batched image input. A mesh with no data axes yields the replicated
+    spec.
+
+    Safe to combine with ``jax.jit(..., donate_argnums=)``: a sharded
+    donated argument aliases only its *per-chip* buffers, and because
+    this sharding fixes both placement and layout at jit time, every tick
+    of a serving loop lands its freshly-transferred input in the same
+    per-chip arrangement — donation then lets XLA reuse those buffers
+    across ticks instead of accumulating one live input per in-flight
+    dispatch."""
+    dp = data_axes(mesh)
+    return NamedSharding(mesh, P(dp if dp else None,
+                                 *([None] * (rank - 1))))
+
+
 def _path_str(path) -> str:
     out = []
     for p in path:

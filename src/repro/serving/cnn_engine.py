@@ -20,9 +20,26 @@ SLO:
   smallest covering bucket (the latency-greedy policy; also the PR-2
   compatible default).
 
-One staging buffer sized for the largest bucket is allocated once; bucket
-dispatches slice its leading rows, and only stale slots left by a previous
-larger tick are re-zeroed (never the whole buffer).
+Staging buffers sized for the largest bucket are allocated once; bucket
+dispatches slice their leading rows, and only stale slots left by a
+previous larger tick are re-zeroed (never the whole buffer).
+
+Pipelined execution (``pipeline_depth >= 2``) makes the tick loop
+asynchronous: ``step()`` *launches* the bucket executable (JAX dispatch
+is async — the call returns an in-flight array, not a result) and
+records an ``InflightTick`` instead of blocking, so the host packs tick
+N+1 while the device computes tick N. Completion — ``block_until_ready``
++ unpack + ``RequestTrace`` — happens lazily: at the start of the next
+``step()`` for ticks whose results are already ready, when the pipeline
+is full and the oldest tick's staging buffer must be reclaimed, on an
+explicit ``drain()``, or when a requester ``poll()``s for its result.
+Staging rotates across ``pipeline_depth`` host buffers so the buffer a
+tick was packed from is never overwritten while that tick may still be
+reading it (the JAX CPU backend can alias host memory). Bucket
+executables are compiled with ``donate=True`` so each tick's device
+input buffer is reused across ticks instead of growing the live set.
+``pipeline_depth=1`` (default) is the fully synchronous engine with
+byte-for-byte identical scheduling, accounting and trace semantics.
 """
 from __future__ import annotations
 
@@ -91,6 +108,22 @@ class RequestTrace:
     slo_ok: bool
 
 
+@dataclasses.dataclass
+class InflightTick:
+    """One dispatched-but-not-retired tick: the in-flight device output
+    plus everything completion needs to unpack it and write traces. The
+    staging buffer index pins which rotating host buffer this tick was
+    packed from — that buffer is not reused until this tick retires."""
+    bucket: int
+    reqs: List[CNNRequest]
+    out: object                        # in-flight jax.Array
+    t_dispatch: float                  # engine clock at dispatch
+    t_launch_pc: float                 # perf_counter at dispatch
+    t_launched_pc: float               # perf_counter after dispatch returned
+    ready_at_pc: float                 # t_launch_pc + injected device delay
+    buf_index: int
+
+
 class CNNServingEngine:
     """Batches single-image requests through per-bucket compiled plans.
 
@@ -115,6 +148,17 @@ class CNNServingEngine:
     measured at per-chip batch N on one chip is exactly the workload each
     chip runs in a sharded bucket of ``N * data_shards``, so existing
     single-device records transfer unchanged.
+
+    ``pipeline_depth`` >= 2 turns on asynchronous, double-buffered ticks:
+    up to ``pipeline_depth`` dispatches stay in flight, staging rotates
+    across that many host buffers, executables donate their batched input
+    (device memory reused tick to tick), and results land in ``done``
+    lazily — on later ``step()`` calls, on ``drain()``, or via
+    ``poll(rid)``. Depth 1 (default) is the synchronous engine unchanged.
+    ``device_delay_s`` injects a per-tick device-side delay (a tick is not
+    considered ready until that long after its dispatch) — a test/bench
+    hook that emulates a slower real accelerator on fast-host/slow-device
+    ratios CPU CI cannot otherwise produce.
     """
 
     def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
@@ -130,9 +174,16 @@ class CNNServingEngine:
                  clock: Callable[[], float] = time.monotonic,
                  warmup: bool = False,
                  trace_window: int = 2048,
-                 mesh=None) -> None:
+                 mesh=None,
+                 pipeline_depth: int = 1,
+                 device_delay_s: float = 0.0) -> None:
         self.graph = graph
         self.mesh = mesh
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}")
+        self.pipeline_depth = int(pipeline_depth)
+        self.device_delay_s = float(device_delay_s)
         if mesh is not None:
             from repro.distributed.sharding import (data_shard_count,
                                                     replicated)
@@ -168,20 +219,44 @@ class CNNServingEngine:
         # differ — this is the multi-executable cache the fixed-batch
         # engine could not have. Under a mesh, each chip runs a per-chip
         # slice of the bucket, so the tuning lookup keys off that per-chip
-        # batch — the workload a chip actually executes.
+        # batch — the workload a chip actually executes. Pipelined engines
+        # donate the batched input: ticks are re-staged from host buffers
+        # every dispatch, so the device-side input buffer of tick N is
+        # dead the moment N's outputs exist and XLA may reuse it.
         self._runs = {
             bucket: compile_plan(graph, plan, default_algo=default_algo,
                                  use_pallas=use_pallas, interpret=interpret,
                                  epilogue=epilogue, tuning=tuning,
                                  tuning_batch=bucket // self.data_shards,
-                                 mesh=mesh)
+                                 mesh=mesh,
+                                 donate=self.pipeline_depth > 1)
             for bucket in self.buckets
         }
-        # One staging buffer sized for the largest bucket, allocated ONCE;
-        # _filled tracks how many leading slots hold stale images from the
-        # previous tick so only slots a dispatch would leak are re-zeroed.
-        self._batch_buf = np.zeros((self.b,) + self._shape, self.dtype)
-        self._filled = 0
+        # Rotating staging buffers sized for the largest bucket, allocated
+        # ONCE (one per pipeline slot; the synchronous engine keeps the
+        # single PR-3 buffer). _filled tracks, per buffer, how many leading
+        # slots hold stale images from the tick that last used it, so only
+        # slots a dispatch would leak are re-zeroed.
+        self._batch_bufs = [np.zeros((self.b,) + self._shape, self.dtype)
+                            for _ in range(self.pipeline_depth)]
+        self._filled = [0] * self.pipeline_depth
+        self._buf_cursor = 0
+        # In-flight dispatches, oldest first (completion is FIFO: the
+        # device executes ticks in dispatch order).
+        self._inflight: Deque[InflightTick] = collections.deque()
+        # Serial-device completion model: a tick's service time is its
+        # completion minus max(its launch, the previous completion) — the
+        # device-occupancy time, NOT the host-blocking wall time, which
+        # under pipelining would double-count time spent queued behind the
+        # previous tick.
+        self._last_ready_pc = float("-inf")
+        self._last_done = float("-inf")        # engine-clock completion
+        # Overlap accounting: how much device-busy time elapsed while the
+        # host was NOT blocked waiting on it (stats()["pipeline"]).
+        self._overlap_s = 0.0
+        self._device_busy_s = 0.0
+        self._dispatched_ticks = 0
+        self._completed_ticks = 0
         # Measured per-bucket service time (EMA) — the scheduler's estimate
         # of how much deadline budget a dispatch will consume.
         self._svc: Dict[int, Optional[float]] = {b: None for b in self.buckets}
@@ -196,6 +271,12 @@ class CNNServingEngine:
         self.slo_violations = 0
         if warmup:
             self._warmup()
+
+    @property
+    def _batch_buf(self) -> np.ndarray:
+        """The synchronous engine's single staging buffer (buffer 0) —
+        kept as the PR-3 name for tests and tooling."""
+        return self._batch_bufs[0]
 
     # ------------------------------------------------------------ intake
     def submit(self, req: CNNRequest) -> None:
@@ -256,7 +337,15 @@ class CNNServingEngine:
         under an SLO it *waits* (returns 0) while the oldest request still
         has deadline budget to fill a larger bucket, and dispatches early
         once that budget is nearly spent — ``flush=True`` dispatches
-        unconditionally (drain/shutdown). Returns the number served."""
+        unconditionally (drain/shutdown). Returns the number dispatched.
+
+        Synchronous (depth 1) the dispatch blocks and results are in
+        ``done`` on return; pipelined, the tick is launched asynchronously
+        and retires lazily (any already-ready older ticks retire here
+        first, and the oldest is force-retired when the pipeline is
+        full)."""
+        if self._inflight:
+            self._reap()                    # lazy completion of ready ticks
         if not self.queue:
             return 0
         if now is None:
@@ -267,48 +356,146 @@ class CNNServingEngine:
                 return 0                    # wait to fill a larger bucket
         bucket = self.covering_bucket(len(self.queue))
         batch, self.queue = self.queue[:bucket], self.queue[bucket:]
-        x = self._batch_buf
+        if len(self._inflight) >= self.pipeline_depth:
+            # Pipeline full: the next staging buffer still belongs to the
+            # oldest in-flight tick — retire it (blocking) to reclaim.
+            self._complete(self._inflight.popleft())
+        x = self._stage(batch)
+        t_launch = time.perf_counter()
+        out = self._runs[bucket](self.params, x[:bucket])
+        t_launched = time.perf_counter()
+        self.dispatches[bucket] += 1
+        self._dispatched_ticks += 1
+        tick = InflightTick(bucket=bucket, reqs=batch, out=out,
+                            t_dispatch=now, t_launch_pc=t_launch,
+                            t_launched_pc=t_launched,
+                            ready_at_pc=t_launch + self.device_delay_s,
+                            buf_index=self._last_buf_index)
+        if self.pipeline_depth == 1:
+            self._complete(tick)            # synchronous: block right here
+        else:
+            self._inflight.append(tick)
+        return len(batch)
+
+    # --------------------------------------------------- staging buffers
+    def _stage(self, batch: List[CNNRequest]) -> np.ndarray:
+        """Pack ``batch`` into the next rotating staging buffer, zeroing
+        only slots still holding images a *previous* tick staged there — a
+        smaller bucket after a larger one must not leak stale images into
+        its padded tail. Rotation guarantees the buffer's previous tick
+        has already retired (pipeline depth == buffer count)."""
+        idx = self._buf_cursor
+        self._buf_cursor = (idx + 1) % len(self._batch_bufs)
+        self._last_buf_index = idx
+        x = self._batch_bufs[idx]
         for i, req in enumerate(batch):
             x[i] = req.image
-        # Zero only slots still holding images a *previous* tick staged —
-        # a smaller bucket after a larger one must not leak stale images
-        # into its padded tail.
-        if self._filled > len(batch):
-            x[len(batch):self._filled] = 0
-        self._filled = len(batch)
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(self._runs[bucket](self.params,
-                                                       x[:bucket]))
-        wall = time.perf_counter() - t0
-        out = np.asarray(out)
-        for i, req in enumerate(batch):
-            self.done[req.rid] = out[i]
-        prev = self._svc[bucket]
-        self._svc[bucket] = wall if prev is None else 0.5 * prev + 0.5 * wall
-        self.dispatches[bucket] += 1
-        self.served_total += len(batch)
-        for req in batch:
+        if self._filled[idx] > len(batch):
+            x[len(batch):self._filled[idx]] = 0
+        self._filled[idx] = len(batch)
+        return x
+
+    # ------------------------------------------------------- completion
+    def _reap(self) -> None:
+        """Retire in-flight ticks whose results are already ready, without
+        blocking (completion is FIFO — the device runs ticks in dispatch
+        order, so a ready head implies nothing about later ticks)."""
+        while self._inflight:
+            head = self._inflight[0]
+            if time.perf_counter() < head.ready_at_pc:
+                break
+            is_ready = getattr(head.out, "is_ready", None)
+            if is_ready is None or not is_ready():
+                break
+            self._complete(self._inflight.popleft())
+
+    def _complete(self, tick: InflightTick) -> None:
+        """Blocking completion of one tick: wait for the device, unpack
+        results into ``done``, update the bucket's service EMA from the
+        *device-completion* time, and write ``RequestTrace`` records."""
+        t_block = time.perf_counter()
+        out = jax.block_until_ready(tick.out)
+        if self.device_delay_s:
+            remaining = tick.ready_at_pc - time.perf_counter()
+            if remaining > 0:
+                time.sleep(remaining)       # emulated device still busy
+        t_ready = time.perf_counter()
+        # Serial-device occupancy: this tick could only start once the
+        # previous one finished, so its service time is completion minus
+        # max(launch, previous completion) — under pipelining the naive
+        # (completion - launch) would fold queueing behind older ticks
+        # into the EMA and wreck the scheduler's deadline budgets.
+        start = max(tick.t_launch_pc, self._last_ready_pc)
+        service = max(t_ready - start, 1e-9)
+        self._last_ready_pc = t_ready
+        # Overlap = the part of this tick's device time that elapsed
+        # between its dispatch call *returning* and the host blocking on
+        # the result — i.e. device time during which the host was free to
+        # pack/dispatch other ticks. Synchronous ticks block immediately
+        # after dispatch, so their overlap is ~0; the dispatch call
+        # itself (tracing, transfer) is host work and never counts.
+        free_from = max(tick.t_launched_pc, start)
+        self._overlap_s += min(max(t_block - free_from, 0.0), service)
+        self._device_busy_s += service
+        self._completed_ticks += 1
+        arr = np.asarray(out)
+        for i, req in enumerate(tick.reqs):
+            self.done[req.rid] = arr[i]
+        prev = self._svc[tick.bucket]
+        self._svc[tick.bucket] = (service if prev is None
+                                  else 0.5 * prev + 0.5 * service)
+        self.served_total += len(tick.reqs)
+        # Engine-clock completion: pipelined ticks finish no earlier than
+        # the previous tick's completion (the serial device again), which
+        # keeps t_done monotone across out-of-order drains. The
+        # synchronous engine keeps the PR-4 stamp (dispatch + wall).
+        if self.pipeline_depth > 1:
+            t_done = max(tick.t_dispatch, self._last_done) + service
+        else:
+            t_done = tick.t_dispatch + service
+        self._last_done = t_done
+        for req in tick.reqs:
             assert req.t_submit is not None
-            queue_s = max(0.0, now - req.t_submit)
-            latency_s = queue_s + wall
+            queue_s = max(0.0, tick.t_dispatch - req.t_submit)
+            latency_s = queue_s + (t_done - tick.t_dispatch)
             slo_ok = self.slo_s is None or latency_s <= self.slo_s
             if not slo_ok:
                 self.slo_violations += 1
             self.request_log.append(RequestTrace(
-                rid=req.rid, t_submit=req.t_submit, t_dispatch=now,
-                t_done=now + wall, bucket=bucket, queue_s=queue_s,
-                service_s=wall, latency_s=latency_s, slo_ok=slo_ok))
-        self.last_tick = {"bucket": bucket, "served": len(batch),
-                          "wall_s": wall, "now": now,
-                          "per_chip_batch": bucket // self.data_shards}
-        return len(batch)
+                rid=req.rid, t_submit=req.t_submit,
+                t_dispatch=tick.t_dispatch, t_done=t_done,
+                bucket=tick.bucket, queue_s=queue_s, service_s=service,
+                latency_s=latency_s, slo_ok=slo_ok))
+        self.last_tick = {"bucket": tick.bucket, "served": len(tick.reqs),
+                          "wall_s": service, "now": tick.t_dispatch,
+                          "per_chip_batch": tick.bucket // self.data_shards}
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Retire every in-flight tick (blocking, in dispatch order) so
+        ``done`` holds all dispatched results. No-op when synchronous or
+        idle; never dispatches — pair with ``step(flush=True)`` /
+        ``run_until_done()`` to also empty the queue."""
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+        return self.done
+
+    def poll(self, rid: int) -> Optional[np.ndarray]:
+        """Requester-side completion: the result for ``rid`` if its tick
+        has retired, retiring in-flight ticks (oldest first) until it is
+        found. None if ``rid`` was never dispatched (still queued, or
+        unknown)."""
+        while rid not in self.done and self._inflight:
+            self._complete(self._inflight.popleft())
+        return self.done.get(rid)
 
     def reset(self) -> None:
         """Drop queued/served request state and observability counters
-        (trace replays reuse one warmed engine across traces). Compiled
-        executables, the staging buffer and the measured service-time
-        estimates are kept — resetting never forgets what the device
-        taught us."""
+        (trace replays reuse one warmed engine across traces). In-flight
+        ticks are retired first (their measurements still update the
+        EMAs). Compiled executables, the staging buffers and the measured
+        service-time estimates are kept — resetting never forgets what
+        the device taught us."""
+        self.drain()
         self.queue.clear()
         self.done.clear()
         self.dispatches = {b: 0 for b in self.buckets}
@@ -317,14 +504,22 @@ class CNNServingEngine:
         self.submitted_total = 0
         self.served_total = 0
         self.slo_violations = 0
+        self._last_done = float("-inf")
+        self._overlap_s = 0.0
+        self._device_busy_s = 0.0
+        self._dispatched_ticks = 0
+        self._completed_ticks = 0
 
     # ------------------------------------------------------ observability
     def stats(self) -> Dict[str, object]:
         """Snapshot of the engine's request accounting: totals, per-bucket
-        dispatch counts and service EMAs, SLO-violation count, and latency
-        / queue-wait aggregates over the bounded ``request_log`` window
+        dispatch counts and service EMAs, SLO-violation count, latency /
+        queue-wait aggregates over the bounded ``request_log`` window
         (submit→dispatch→done timestamps live in the individual
-        ``RequestTrace`` records). Pure read — never mutates state."""
+        ``RequestTrace`` records), and the pipeline's in-flight/overlap
+        counters. Pure read — never mutates state (in particular it never
+        retires in-flight ticks; ``served`` counts *completed* requests,
+        dispatched-but-inflight ones appear under ``pipeline``)."""
         def _agg(vals: List[float]) -> Optional[Dict[str, float]]:
             if not vals:
                 return None
@@ -342,11 +537,29 @@ class CNNServingEngine:
             "slo_s": self.slo_s,
             "slo_violations": self.slo_violations,
             "dispatches": dict(self.dispatches),
+            # Service EMAs are device-completion times under the serial-
+            # device model (completion minus max(launch, previous
+            # completion)) — NOT host-blocking wall time, so SLO deadline
+            # budgets stay correct when ticks retire lazily under
+            # pipelining.
             "service_ema_s": {b: s for b, s in self._svc.items()
                               if s is not None},
             "window": len(window),
             "latency": _agg([t.latency_s for t in window]),
             "queue_wait": _agg([t.queue_s for t in window]),
+            "pipeline": {
+                "depth": self.pipeline_depth,
+                "inflight": len(self._inflight),
+                "dispatched_ticks": self._dispatched_ticks,
+                "completed_ticks": self._completed_ticks,
+                "device_busy_s": self._device_busy_s,
+                "overlap_s": self._overlap_s,
+                # Fraction of device-busy time that elapsed while the host
+                # was free to pack/dispatch other ticks: ~0 synchronous,
+                # → 1 when packing fully hides behind device compute.
+                "overlap_ratio": (self._overlap_s / self._device_busy_s
+                                  if self._device_busy_s > 0 else 0.0),
+            },
             # Sharded dispatch accounting: how each bucket splits across
             # the mesh (None = single-device engine). Service EMAs above
             # are wall times of the *sharded* dispatch — the scheduler's
@@ -360,20 +573,24 @@ class CNNServingEngine:
         }
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:
-        """Drain the queue, ignoring SLO waits (shutdown/offline replay)."""
+        """Drain the queue, ignoring SLO waits (shutdown/offline replay),
+        then retire every in-flight tick."""
         for _ in range(max_ticks):
             if self.step(flush=True) == 0:
                 break
-        return self.done
+        return self.drain()
 
     # ------------------------------------------------------------ warmup
     def _warmup(self) -> None:
-        """Compile every bucket's executable and prime service estimates by
-        timing one all-zeros tick per bucket (results discarded)."""
+        """Compile every bucket's executable and prime service estimates
+        by timing two all-zeros dispatches per bucket — the first pays
+        compilation, the second's wall time is the steady-state estimate
+        (results discarded; the injected device delay is excluded so the
+        estimate stays the raw device time)."""
         for bucket in self.buckets:
             x = np.zeros((bucket,) + self._shape, self.dtype)
-            t0 = time.perf_counter()
-            jax.block_until_ready(self._runs[bucket](self.params, x))
-            t0 = time.perf_counter()        # second run: steady-state time
-            jax.block_until_ready(self._runs[bucket](self.params, x))
-            self._svc[bucket] = time.perf_counter() - t0
+            for _ in range(2):
+                t0 = time.perf_counter()
+                jax.block_until_ready(self._runs[bucket](self.params, x))
+                wall = time.perf_counter() - t0
+            self._svc[bucket] = wall

@@ -1,0 +1,287 @@
+"""Pipelined serving tier (async tick dispatch, PR 6).
+
+``CNNServingEngine(pipeline_depth=d)`` launches up to ``d`` ticks before
+blocking on any of them: ``step()`` dispatches and returns, an in-flight
+queue tracks the launched device work, and completion happens lazily at
+the next ``step()``/``drain()``/``poll()``. Pinned here: depth-1
+reproduces the synchronous engine exactly (no in-flight state ever),
+async outputs are bitwise identical to synchronous ones, out-of-order
+``poll()`` preserves the request→result mapping, RequestTrace timestamps
+stay monotonic (submit <= dispatch <= done, done nondecreasing across
+ticks), stale slots are zeroed per rotating staging buffer, and the
+``stats()["pipeline"]`` block reports depth / in-flight / overlap.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.cnn.executor import forward, init_params
+from repro.cnn.models import vgg16
+from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
+
+RNG = np.random.default_rng(23)
+
+
+class FakeClock:
+    """Deterministic injectable time source (engine clock only — the
+    pipeline's readiness bookkeeping runs on perf_counter regardless)."""
+
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = vgg16(res=8, scale=0.05)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, params
+
+
+def img():
+    return np.asarray(RNG.standard_normal((8, 8, 3)), np.float32)
+
+
+def submit_n(eng, n, start_rid=0, imgs=None):
+    reqs = [CNNRequest(rid=start_rid + i,
+                       image=imgs[i] if imgs is not None else img())
+            for i in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    return reqs
+
+
+# ------------------------------------------------------------ validation
+
+
+def test_depth_validation(tiny):
+    g, params = tiny
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        CNNServingEngine(g, params, None, batch_size=2, pipeline_depth=0)
+
+
+def test_depth1_is_synchronous(tiny):
+    """Depth 1 must reproduce today's engine: every step completes its
+    tick inline — results land in ``done`` before step() returns and no
+    in-flight state ever exists."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2)
+    assert eng.pipeline_depth == 1
+    submit_n(eng, 2)
+    assert eng.step(now=0.0) == 2
+    assert len(eng._inflight) == 0
+    assert set(eng.done) == {0, 1}
+    assert eng.stats()["pipeline"]["inflight"] == 0
+
+
+# ------------------------------------------------------------ async results
+
+
+def test_async_outputs_match_reference_and_sync(tiny):
+    """The pipelined engine's results are bitwise identical to the
+    synchronous engine's (same executables, same padded staging), and
+    both match the eager forward reference."""
+    g, params = tiny
+    n = 10
+    imgs = [img() for _ in range(n)]
+    outs = {}
+    for depth in (1, 3):
+        eng = CNNServingEngine(g, params, None, batch_size=4,
+                               pipeline_depth=depth)
+        submit_n(eng, n, imgs=imgs)
+        done = eng.run_until_done()
+        assert set(done) == set(range(n))
+        outs[depth] = {r: np.asarray(v) for r, v in done.items()}
+    for r in range(n):
+        assert np.array_equal(outs[1][r], outs[3][r])
+        want = np.asarray(forward(g, params, jnp.asarray(imgs[r])))
+        assert np.allclose(outs[3][r], want, rtol=2e-2, atol=2e-3)
+
+
+def test_step_returns_before_completion_then_drain(tiny):
+    """At depth >= 2 a dispatched tick is NOT in ``done`` right after
+    step() — it sits in flight until drain() retires it."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, buckets=(2,),
+                           pipeline_depth=2, warmup=True)
+    submit_n(eng, 2)
+    assert eng.step(now=0.0, flush=True) == 2
+    assert len(eng._inflight) == 1
+    assert 0 not in eng.done            # launched, not yet retired
+    done = eng.drain()
+    assert len(eng._inflight) == 0
+    assert set(done) == {0, 1}
+
+
+def test_pipeline_depth_bounds_inflight(tiny):
+    """The dispatch loop force-completes the oldest tick rather than
+    exceed ``pipeline_depth`` launched-but-unretired ticks (each pins a
+    staging buffer)."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, buckets=(1,),
+                           pipeline_depth=2, warmup=True)
+    submit_n(eng, 5)
+    for i in range(5):
+        assert eng.step(now=0.0, flush=True) == 1
+        assert len(eng._inflight) <= 2
+    eng.drain()
+    assert set(eng.done) == set(range(5))
+
+
+def test_poll_out_of_order_preserves_mapping(tiny):
+    """poll() on a request in a LATER tick retires everything up to and
+    including its tick; each rid still gets its own image's logits. An
+    injected device delay holds the ticks in flight (on the tiny graph
+    they would otherwise be ready — and lazily reaped — by the next
+    step())."""
+    g, params = tiny
+    n = 6
+    imgs = [img() for _ in range(n)]
+    eng = CNNServingEngine(g, params, None, buckets=(2,),
+                           pipeline_depth=3, device_delay_s=0.2,
+                           warmup=True)
+    submit_n(eng, n, imgs=imgs)
+    for _ in range(3):                  # three bucket-2 ticks in flight
+        eng.step(now=0.0, flush=True)
+    assert len(eng._inflight) == 3
+    out5 = eng.poll(5)                  # newest tick → retires all three
+    assert out5 is not None and len(eng._inflight) == 0
+    assert set(eng.done) == set(range(n))
+    for r in range(n):
+        want = np.asarray(forward(g, params, jnp.asarray(imgs[r])))
+        assert np.allclose(np.asarray(eng.done[r]), want,
+                           rtol=2e-2, atol=2e-3)
+    assert eng.poll(99) is None
+
+
+# ------------------------------------------------------------ timestamps
+
+
+def test_trace_timestamps_monotonic(tiny):
+    """submit <= dispatch <= done per request, and completion times are
+    nondecreasing in dispatch order even when several ticks were in
+    flight simultaneously (the serial-device completion model)."""
+    g, params = tiny
+    clock = FakeClock()
+    eng = CNNServingEngine(g, params, None, buckets=(2,),
+                           pipeline_depth=4, clock=clock, warmup=True)
+    for i in range(8):
+        clock.t = 0.1 * i
+        eng.submit(CNNRequest(rid=i, image=img()))
+    clock.t = 1.0
+    while eng.queue:
+        eng.step(flush=True)
+    eng.drain()
+    assert len(eng.request_log) == 8
+    for tr in eng.request_log:
+        assert tr.t_submit <= tr.t_dispatch <= tr.t_done
+        assert tr.queue_s >= 0.0 and tr.service_s > 0.0
+        assert tr.latency_s == pytest.approx(tr.t_done - tr.t_submit)
+    dones = [tr.t_done for tr in eng.request_log]
+    assert dones == sorted(dones)
+
+
+# ------------------------------------------------------------ staging
+
+
+def test_rotating_buffers_and_stale_slot_zeroing(tiny):
+    """Each in-flight tick pins its own staging buffer; a buffer reused
+    for a smaller batch has its stale tail zeroed, so padded lanes never
+    leak a previous tick's images."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=4,
+                           pipeline_depth=2, warmup=True)
+    assert len(eng._batch_bufs) == 2
+    assert eng._batch_buf is eng._batch_bufs[0]   # compat alias
+    imgs = [img() for _ in range(8)]
+    submit_n(eng, 8, imgs=imgs)
+    eng.step(now=0.0, flush=True)       # bucket 4 → buffer 0 full
+    eng.step(now=0.0, flush=True)       # bucket 4 → buffer 1 full
+    eng.drain()
+    # Both buffers now hold 4 stale images each. A 1-request tick reuses
+    # the next buffer in rotation and must zero lanes [1:4].
+    eng.submit(CNNRequest(rid=8, image=imgs[0]))
+    eng.step(now=0.0, flush=True)
+    eng.drain()
+    used = eng._batch_bufs[eng._last_buf_index]
+    assert np.array_equal(used[0], imgs[0])
+    assert not used[1:4].any()
+    # the OTHER buffer still holds its stale (nonzero) images untouched
+    other = eng._batch_bufs[1 - eng._last_buf_index]
+    assert other[1:4].any()
+
+
+# ------------------------------------------------------------ stats
+
+
+def test_pipeline_stats_block(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, buckets=(2,),
+                           pipeline_depth=2, warmup=True)
+    p0 = eng.stats()["pipeline"]
+    assert p0["depth"] == 2
+    assert p0["inflight"] == p0["dispatched_ticks"] == 0
+    assert p0["overlap_ratio"] == 0.0
+    submit_n(eng, 4)
+    eng.step(now=0.0, flush=True)
+    assert eng.stats()["pipeline"]["inflight"] == 1
+    eng.step(now=0.0, flush=True)
+    eng.drain()
+    p = eng.stats()["pipeline"]
+    assert p["inflight"] == 0
+    assert p["dispatched_ticks"] == p["completed_ticks"] == 2
+    assert p["device_busy_s"] > 0.0
+    assert 0.0 <= p["overlap_ratio"] <= 1.0
+    # reset clears pipeline accounting along with request accounting
+    eng.reset()
+    p2 = eng.stats()["pipeline"]
+    assert p2["dispatched_ticks"] == p2["completed_ticks"] == 0
+    assert p2["device_busy_s"] == 0.0
+
+
+def test_reset_with_inflight_drains_first(tiny):
+    """reset() on an engine with launched ticks retires them (device
+    work is not abandoned mid-flight) before clearing accounting."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, buckets=(2,),
+                           pipeline_depth=2, warmup=True)
+    submit_n(eng, 2)
+    eng.step(now=0.0, flush=True)
+    assert len(eng._inflight) == 1
+    eng.reset()
+    assert len(eng._inflight) == 0
+    assert eng.stats()["submitted"] == 0 and not eng.done
+
+
+def test_warmup_primes_emas_at_depth2(tiny):
+    """Warmup runs synchronously (block_until_ready) regardless of
+    depth, so service EMAs are primed before the first real tick."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2,
+                           pipeline_depth=2, warmup=True)
+    emas = eng.stats()["service_ema_s"]
+    assert set(emas) == {1, 2}
+    assert all(v > 0.0 for v in emas.values())
+
+
+def test_device_delay_inflates_service_ema(tiny):
+    """The injected device delay (slow-accelerator emulation) shows up
+    in the measured per-tick service time — the EMA tracks device
+    completion, not host dispatch."""
+    g, params = tiny
+    delay = 0.05
+    fast = CNNServingEngine(g, params, None, buckets=(1,), warmup=True)
+    slow = CNNServingEngine(g, params, None, buckets=(1,),
+                            device_delay_s=delay, warmup=True)
+    submit_n(fast, 1)
+    submit_n(slow, 1)
+    fast.step(now=0.0, flush=True)
+    slow.step(now=0.0, flush=True)
+    # Warmup measures the raw device wall (no injected delay), so after
+    # one real tick the EMA blends one delayed sample: >= 0.4x the delay.
+    assert (slow.stats()["service_ema_s"][1]
+            >= fast.stats()["service_ema_s"][1] + 0.4 * delay)
