@@ -15,6 +15,11 @@ clock — overlap only exists in real time):
   real time passes and the engine runs free, so host-side packing and
   device compute genuinely overlap when the engine pipelines. This is
   the only replay that can observe ``pipeline_depth`` > 1.
+* ``replay_robust`` — the shed-aware virtual-clock discipline for
+  robustness-armed engines (``bench_chaos_serving``): requests may end
+  ``rejected_full`` / ``shed_deadline`` / ``failed`` instead of
+  completing, so the loop terminates on *outcome conservation* (every
+  submitted request accounted) rather than on every request finishing.
 * ``hist`` — the per-bucket dispatch histogram row value.
 """
 
@@ -25,7 +30,9 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.serving.cnn_engine import CNNRequest, CNNServingEngine
+from repro.serving.cnn_engine import (OUTCOME_COMPLETED, OUTCOME_FAILED,
+                                      OUTCOME_REJECTED, OUTCOME_SHED,
+                                      CNNRequest, CNNServingEngine)
 
 
 def poisson_trace(
@@ -73,6 +80,63 @@ def replay(
     lat = np.array([done_at[rid] - trace[rid][0] for rid in range(n)])
     makespan = max(done_at.values()) - trace[0][0]
     return lat, makespan
+
+
+def replay_robust(
+    eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]]
+) -> Tuple[Dict[int, str], Dict[int, float], float]:
+    """Shed-aware virtual-clock replay for robustness-armed engines
+    (``pipeline_depth == 1``; lazy retirement under a virtual clock
+    would conflate simulated queueing with real completion order).
+
+    Same discrete-event discipline as ``replay`` — arrivals at trace
+    timestamps, the engine's scheduler decides, measured tick wall time
+    advances the clock — but every request is tracked to its terminal
+    outcome instead of assuming completion: submit verdicts catch
+    ``rejected_full``, the engine's ``shed_rids`` / ``failed`` /
+    ``done`` sets catch the rest (a failed tick still advances the
+    clock by its measured fault wall time). Returns ``(outcomes,
+    done_at, makespan)`` with ``outcomes[rid]`` one of the four
+    ``RequestOutcome`` strings for every rid in the trace — conservation
+    is the caller's gate, termination is this loop's."""
+    n = len(trace)
+    outcomes: Dict[int, str] = {}
+    done_at: Dict[int, float] = {}
+    i, now = 0, 0.0
+    while True:
+        while i < n and trace[i][0] <= now + 1e-12:
+            verdict = eng.submit(
+                CNNRequest(rid=i, image=trace[i][1], t_submit=trace[i][0]))
+            if verdict == OUTCOME_REJECTED:
+                outcomes[i] = OUTCOME_REJECTED
+            i += 1
+        served = eng.step(now=now)
+        for rid in eng.shed_rids:
+            outcomes.setdefault(rid, OUTCOME_SHED)
+        for rid in eng.failed:
+            outcomes.setdefault(rid, OUTCOME_FAILED)
+        if served:
+            wall = float(eng.last_tick["wall_s"])
+            for rid in eng.done:
+                if rid not in outcomes:
+                    outcomes[rid] = OUTCOME_COMPLETED
+                    done_at[rid] = now + wall
+            now += wall  # the engine is busy while a tick runs
+            continue
+        if i >= n and not eng.queue:
+            break
+        nxt = []
+        if i < n:
+            nxt.append(trace[i][0])
+        at = eng.next_dispatch_at()
+        if at is not None:
+            nxt.append(at)
+        assert nxt, "robust replay stalled with requests outstanding"
+        now = max(now, min(nxt))
+    assert len(outcomes) == n, \
+        f"replay lost requests: {n - len(outcomes)} unaccounted"
+    makespan = (max(done_at.values()) - trace[0][0]) if done_at else 0.0
+    return outcomes, done_at, makespan
 
 
 def replay_wallclock(

@@ -16,6 +16,7 @@ REPO = Path(__file__).resolve().parents[1]
 
 def main() -> None:
     import benchmarks.bench_algorithms as ba
+    import benchmarks.bench_chaos_serving as bc
     import benchmarks.bench_dse as bd
     import benchmarks.bench_dynamic_batching as bdb
     import benchmarks.bench_e2e as be
@@ -34,6 +35,7 @@ def main() -> None:
                       ("bench_dynamic_batching", bdb),
                       ("bench_sharded_serving", bs),
                       ("bench_pipelined_serving", bp),
+                      ("bench_chaos_serving", bc),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

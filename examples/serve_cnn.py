@@ -21,7 +21,18 @@ inputs), results retire lazily, and the completion loop must ``drain()``
 once everything is dispatched — results may still be in flight when the
 queue empties.
 
-CI's serving-smoke job runs the ``--smoke`` configuration end to end.
+``--max-queue N`` bounds admission (overflow requests are rejected with
+a first-class ``rejected_full`` outcome instead of growing the queue),
+and ``--chaos`` arms the full robustness stack: a seeded ``FaultPlan``
+(transient injected device faults absorbed by the bounded retry loop),
+deadline shedding, and the degrade-mode hysteresis controller. Either
+way the serving loop below terminates on *outcome conservation* — every
+submitted request accounted completed/rejected/shed/failed — not on
+every request completing, and the ``stats()["robustness"]`` block in
+the report shows the ledger.
+
+CI's serving-smoke job runs the ``--smoke`` configuration end to end
+(plus a ``--smoke --chaos --max-queue`` variant).
 """
 import argparse
 import json
@@ -70,6 +81,13 @@ def main() -> None:
     ap.add_argument("--record", type=str, default=None,
                     help="tuning-record JSON: loaded if it exists, else "
                          "autotuned and saved there")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: reject submits once this "
+                         "many requests are queued")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm the robustness stack: seeded fault "
+                         "injection + bounded retries, deadline "
+                         "shedding, degrade mode")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (res 28, scale 0.1, no tuning)")
     args = ap.parse_args()
@@ -94,10 +112,27 @@ def main() -> None:
         build_record(g, plan, args.record, buckets=(1, 2))
 
     mesh = make_data_mesh(n_dev) if n_dev > 1 else None
+    robustness = {}
+    if args.max_queue is not None:
+        robustness["max_queue"] = args.max_queue
+    if args.chaos:
+        from repro.distributed.fault import FaultPlan
+        from repro.serving.cnn_engine import DegradeConfig
+        # Transient faults only (the bounded retry loop absorbs every
+        # one, so the reference spot-check below still has results);
+        # tick 0 is left clean so request 0 always completes.
+        plan_f = FaultPlan.seeded(seed=1, n_ticks=2 * args.requests,
+                                  fail_rate=0.2, failures=1)
+        plan_f.faults.pop(0, None)
+        robustness.update(shed_deadline=True, fault_plan=plan_f,
+                          max_retries=2, degrade=DegradeConfig())
+        print(f"chaos armed: {len(plan_f)} planned transient faults, "
+              f"deadline shedding, degrade controller")
     eng = CNNServingEngine(g, params, plan, batch_size=args.batch,
                            slo_s=args.slo_ms / 1e3, tuning=record,
                            mesh=mesh, warmup=True,
-                           pipeline_depth=args.pipeline_depth)
+                           pipeline_depth=args.pipeline_depth,
+                           **robustness)
     print(f"bucket ladder: {eng.buckets}"
           + (f" (per-chip {[b // eng.data_shards for b in eng.buckets]})"
              if mesh is not None else ""))
@@ -112,7 +147,15 @@ def main() -> None:
     for i in range(n_burst):
         eng.submit(CNNRequest(rid=i, image=imgs[i]))
     rid = n_burst
-    while len(eng.done) < args.requests:
+
+    def accounted() -> int:
+        # Outcome conservation is the loop invariant: with the
+        # robustness knobs armed some requests end rejected/shed/failed
+        # instead of completed — all four are terminal.
+        return (len(eng.done) + len(eng.failed) + len(eng.shed_rids)
+                + eng.rejected_total)
+
+    while accounted() < args.requests:
         if eng.step() == 0:
             if rid < args.requests:                # trickle one more in
                 eng.submit(CNNRequest(rid=rid, image=imgs[rid]))
@@ -132,6 +175,9 @@ def main() -> None:
     print(json.dumps(eng.stats(), indent=2, default=str))
     if not np.allclose(eng.done[0], want, rtol=2e-2, atol=2e-3):
         raise SystemExit("engine output diverged from reference")
+    rb = eng.stats()["robustness"]
+    if sum(rb["outcomes"].values()) + rb["pending"] != eng.submitted_total:
+        raise SystemExit("request accounting failed to conserve")
 
 
 if __name__ == "__main__":

@@ -231,6 +231,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None,
                  mesh=None,
                  donate: bool = False,
+                 fault_hook: Optional[Callable[[], None]] = None,
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
@@ -288,6 +289,17 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     only that copy is donated). Donation composes with ``mesh=``: the
     input's ``NamedSharding`` pins placement, donation only allows
     aliasing of the per-chip buffers.
+
+    ``fault_hook`` (robustness testing) is a zero-arg callable invoked on
+    the host before EVERY invocation of the compiled program — never at
+    compile time, never inside the traced computation. It may raise (an
+    injected dispatch failure, e.g. ``distributed.fault.DeviceFault``) or
+    sleep (a straggling launch path); the math is untouched, so a hooked
+    executable's outputs stay bitwise identical to an unhooked one.
+    ``CNNServingEngine(fault_plan=...)`` threads its per-tick fault
+    schedule through this hook and wraps the call in a bounded
+    retry-with-backoff loop; ``fault_hook=None`` (default) adds no
+    wrapper at all.
     """
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
@@ -300,8 +312,10 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                            avg_pool_via)
 
     if mesh is None:
-        return _quiet_donation(jax.jit(_run, donate_argnums=donate_argnums),
-                               donate)
+        return _with_fault_hook(
+            _quiet_donation(jax.jit(_run, donate_argnums=donate_argnums),
+                            donate),
+            fault_hook)
 
     from repro.distributed.sharding import (batch_input_sharding,
                                             data_shard_count, replicated)
@@ -326,7 +340,27 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
 
     run.mesh = mesh
     run.data_shards = n_shards
-    return run
+    return _with_fault_hook(run, fault_hook)
+
+
+def _with_fault_hook(run: Callable, fault_hook: Optional[Callable[[], None]]
+                     ) -> Callable:
+    """Outermost wrapper: call ``fault_hook()`` before each invocation so
+    injected dispatch faults/delays surface exactly where a real device
+    error would — at the call, after any mesh validation wrapper built
+    the arguments. No hook, no wrapper (the common path stays
+    unchanged)."""
+    if fault_hook is None:
+        return run
+
+    def hooked(params: Params, x: jax.Array) -> jax.Array:
+        fault_hook()
+        return run(params, x)
+
+    for attr in ("mesh", "data_shards"):
+        if hasattr(run, attr):
+            setattr(hooked, attr, getattr(run, attr))
+    return hooked
 
 
 def _quiet_donation(jitted: Callable, donate: bool) -> Callable:

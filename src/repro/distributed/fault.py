@@ -1,30 +1,133 @@
-"""Fault tolerance & straggler mitigation — the control-plane logic.
+"""Fault tolerance & straggler mitigation — serving-path primitives plus
+the multi-host control-plane logic.
 
-This container has one real device, so the *mechanisms* (what a 1000-node
-deployment needs) are implemented as deterministic, unit-testable logic
-plus single-host drivers:
+This container has one real device, so every *mechanism* here is
+deterministic, unit-testable logic that single-host drivers (today: the
+CNN serving engine) exercise for real:
 
+  * ``DeviceFault`` / ``TickFault`` / ``FaultPlan`` — seeded,
+    deterministic fault injection for the serving tick loop.
+    ``CNNServingEngine(fault_plan=...)`` consults the plan by global
+    dispatch index: a planned fault fails a tick's first N attempts
+    (surfacing either at dispatch or at completion, like a real async
+    accelerator fault) or delays its readiness (a straggling device).
+    The engine wraps dispatch in a bounded retry-with-backoff loop; a
+    tick that exhausts retries fails its requests cleanly.
+  * ``robust_zscore`` — the median/MAD statistic behind
+    ``StragglerMonitor``, exported on its own because the serving
+    engine's degrade controller reuses it to spot service-time spikes
+    (a straggling tick is the single-host analogue of a straggling
+    host).
+  * ``StragglerMonitor`` — per-host step-time tracking over that
+    statistic; persistent offenders are proposed for eviction (which
+    then flows through ``ElasticPlanner``).
   * ``HealthTracker`` — heartbeat bookkeeping; hosts that miss
     ``max_missed`` beats are declared dead.
-  * ``ElasticPlanner`` — given the surviving host set, produce the largest
-    valid (data, model) mesh that preserves the model axis (TP must stay
-    intact; data shrinks), plus the checkpoint-restore reshard plan.
-  * ``StragglerMonitor`` — per-step duration tracking with a robust
-    z-score; persistent offenders are proposed for eviction (which then
-    flows through ElasticPlanner).
-  * ``run_with_retries`` — the supervisor loop: run step; on simulated/real
-    failure, restore from the last committed checkpoint and continue. The
-    deterministic data pipeline (pure function of step) makes the replay
-    exact.
+  * ``ElasticPlanner`` — given the surviving host set, produce the
+    largest valid (data, model) mesh that preserves the model axis (TP
+    must stay intact; data shrinks), plus the restore reshard plan.
+  * ``run_with_retries`` — the generic bounded-retry supervisor loop
+    (run step; on failure restore from the last commit and replay). The
+    serving engine's per-tick retry loop is the same contract scoped to
+    one dispatch: bounded attempts, deterministic replay from retained
+    state (the pinned staging buffer), clean failure when exhausted.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import random
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = [
+    "DeviceFault", "TickFault", "FaultPlan", "robust_zscore",
+    "StragglerMonitor", "HealthTracker", "HostState", "MeshPlan",
+    "ElasticPlanner", "run_with_retries",
+]
 
 
+# --------------------------------------------------------- fault injection
+class DeviceFault(RuntimeError):
+    """An injected (or emulated) device-side failure of one dispatch
+    attempt. The serving engine's retry loop catches exactly this type —
+    deterministic injection never masks real bugs, which still
+    propagate."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TickFault:
+    """Fault schedule for ONE tick (one global dispatch index).
+
+    ``failures`` consecutive attempts fail before the tick can succeed;
+    whether each failure surfaces at *dispatch* (the launch call raises)
+    or at *completion* (the async result turns out bad when blocked on —
+    how a real accelerator fault usually presents) is picked by
+    ``at_dispatch``. ``delay_s`` postpones the tick's device readiness
+    without failing it — a straggler, visible to the engine's
+    service-time EMAs and its degrade controller's spike detector."""
+    failures: int = 0
+    delay_s: float = 0.0
+    at_dispatch: bool = False
+
+
+class FaultPlan:
+    """Deterministic fault schedule keyed by global dispatch index.
+
+    Plans are plain data — build one explicitly (``FaultPlan({3:
+    TickFault(failures=1)})``), or generate one reproducibly with
+    ``FaultPlan.seeded``. The engine asks ``get(tick_index)`` once per
+    dispatched tick; warmup ticks never consume indices."""
+
+    def __init__(self, faults: Mapping[int, TickFault]) -> None:
+        self.faults: Dict[int, TickFault] = {
+            int(k): v for k, v in faults.items()}
+
+    def get(self, tick_index: Optional[int]) -> Optional[TickFault]:
+        if tick_index is None:
+            return None
+        return self.faults.get(tick_index)
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    @classmethod
+    def seeded(cls, seed: int, n_ticks: int,
+               fail_rate: float = 0.0, failures: int = 1,
+               delay_rate: float = 0.0, delay_s: float = 0.0,
+               at_dispatch: bool = False) -> "FaultPlan":
+        """Reproducible random plan over the first ``n_ticks`` dispatch
+        indices: each tick independently fails (``fail_rate``, with
+        ``failures`` consecutive bad attempts) and/or straggles
+        (``delay_rate`` × ``delay_s``). Same seed ⇒ same plan, so chaos
+        benchmarks are replayable."""
+        rng = random.Random(seed)
+        faults: Dict[int, TickFault] = {}
+        for t in range(n_ticks):
+            fail = rng.random() < fail_rate
+            lag = rng.random() < delay_rate
+            if fail or lag:
+                faults[t] = TickFault(failures=failures if fail else 0,
+                                      delay_s=delay_s if lag else 0.0,
+                                      at_dispatch=at_dispatch)
+        return cls(faults)
+
+
+def robust_zscore(value: float, samples: Sequence[float]) -> float:
+    """Median/MAD z-score of ``value`` against ``samples`` — the robust
+    statistic ``StragglerMonitor`` applies per host, exported standalone
+    so the serving engine's degrade controller can apply it to tick
+    service times. MAD units (no 1.4826 normal-consistency factor): a
+    threshold ``k`` here means exactly ``value > median + k * MAD``."""
+    ts = sorted(samples)
+    n = len(ts)
+    if n == 0:
+        return 0.0
+    med = ts[n // 2]
+    mad = sorted(abs(t - med) for t in ts)[n // 2] or 1e-9
+    return (value - med) / mad
+
+
+# ------------------------------------------------------------ health plane
 @dataclasses.dataclass
 class HostState:
     host_id: int
@@ -99,8 +202,12 @@ class ElasticPlanner:
 
 
 class StragglerMonitor:
-    """Robust per-host step-time tracking. A host is an offender when its
-    step time exceeds median + k·MAD for ``patience`` consecutive steps."""
+    """Robust per-host step-time tracking over ``robust_zscore``: a host
+    is an offender when its step time's z-score against the cohort
+    exceeds ``k`` for ``patience`` consecutive steps. The serving
+    engine's degrade controller applies the same statistic to its own
+    tick service-time history (one "host", spikes over time instead of
+    across hosts)."""
 
     def __init__(self, n_hosts: int, k: float = 4.0, patience: int = 3):
         self.k = k
@@ -108,13 +215,10 @@ class StragglerMonitor:
         self.offense: Dict[int, int] = {i: 0 for i in range(n_hosts)}
 
     def observe(self, step_times: Dict[int, float]) -> List[int]:
-        ts = sorted(step_times.values())
-        n = len(ts)
-        med = ts[n // 2]
-        mad = sorted(abs(t - med) for t in ts)[n // 2] or 1e-9
+        ts = list(step_times.values())
         evict = []
         for host, t in step_times.items():
-            if t > med + self.k * mad:
+            if robust_zscore(t, ts) > self.k:
                 self.offense[host] = self.offense.get(host, 0) + 1
                 if self.offense[host] >= self.patience:
                     evict.append(host)
@@ -131,10 +235,17 @@ def run_with_retries(step_fn: Callable[[int], None],
                      max_restarts: int = 3,
                      failure_injector: Optional[Callable[[int], None]] = None
                      ) -> Dict[str, int]:
-    """Supervisor: run ``n_steps``; on exception restore + replay.
+    """Bounded-retry supervisor: run ``n_steps``; on exception restore +
+    replay from the last commit; give up past ``max_restarts``. This is
+    the whole-loop form of the contract the serving engine applies per
+    tick (``CNNServingEngine(max_retries=, retry_backoff_s=)``): retained
+    state makes the replay exact — a committed checkpoint here, the
+    pinned staging buffer there — and exhaustion fails cleanly instead
+    of wedging.
 
     ``restore_fn`` returns the step to resume from (last committed + 1).
-    ``failure_injector(step)`` may raise to simulate node loss (tests).
+    ``failure_injector(step)`` may raise to simulate node loss (tests;
+    the serving analogue is ``FaultPlan``).
     """
     restarts = 0
     step = 0

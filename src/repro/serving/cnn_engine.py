@@ -40,13 +40,46 @@ executables are compiled with ``donate=True`` so each tick's device
 input buffer is reused across ticks instead of growing the live set.
 ``pipeline_depth=1`` (default) is the fully synchronous engine with
 byte-for-byte identical scheduling, accounting and trace semantics.
+
+Robustness (overload + faults) — every request ends in exactly one
+``RequestOutcome``, and the four counters conserve
+(``completed + rejected_full + shed_deadline + failed + pending ==
+submitted``):
+
+* **bounded admission** — ``max_queue=N`` rejects at ``submit()`` once
+  the queue holds N requests (outcome ``rejected_full``) instead of
+  growing without limit;
+* **deadline shedding** — ``shed_deadline=True`` (with an ``slo_s``)
+  drops queued requests whose deadline is already unmeetable *even by
+  the cheapest bucket's measured service estimate* before they occupy a
+  bucket slot (outcome ``shed_deadline``);
+* **fault-injected tick retry** — a ``distributed.fault.FaultPlan``
+  fails or delays planned ticks (dispatch- or completion-surfaced,
+  emulating async device faults/stragglers on this CPU-only host);
+  dispatch wraps in a bounded retry-with-backoff loop (``max_retries``,
+  ``retry_backoff_s``) replaying from the tick's pinned staging buffer,
+  and a tick that exhausts retries fails its requests cleanly (outcome
+  ``failed``; pipeline slot and staging buffer reclaimed, service EMAs
+  untouched, later ticks unaffected — including in-flight ticks at
+  ``pipeline_depth >= 2``);
+* **graceful degradation** — ``degrade=DegradeConfig(...)`` arms a
+  hysteresis controller: sustained queue pressure or consecutive
+  service-time spikes (``distributed.fault.robust_zscore`` over the
+  recent tick history) switch the scheduler to dispatch-immediately
+  smallest-bucket mode; SLO batching is restored only after the queue
+  stays below the exit watermark for ``exit_ticks`` consecutive ticks.
+
+All four knobs default OFF, in which case scheduling, outputs and
+accounting are bit-for-bit the pre-robustness engine.
+``stats()["robustness"]`` reports outcome counters, retries, failed
+ticks, degrade transitions and the queue high-water mark either way.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Callable, Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Set
 
 import jax
 import numpy as np
@@ -55,6 +88,16 @@ from repro.cnn.executor import compile_plan
 from repro.core.algorithms import Algorithm, IM2COL
 from repro.core.graph import Graph
 from repro.core.mapper import ExecutionPlan
+from repro.distributed.fault import DeviceFault, FaultPlan, robust_zscore
+
+# The four terminal request outcomes (RequestTrace.outcome). Exactly one
+# per submitted request; the engine's conservation invariant is
+#   completed + rejected_full + shed_deadline + failed + pending
+#     == submitted.
+OUTCOME_COMPLETED = "completed"
+OUTCOME_REJECTED = "rejected_full"
+OUTCOME_SHED = "shed_deadline"
+OUTCOME_FAILED = "failed"
 
 
 def batch_buckets(max_batch: int, shard: int = 1) -> List[int]:
@@ -96,7 +139,12 @@ class RequestTrace:
     """Per-request lifecycle accounting (engine-clock timestamps; the
     service leg is the tick's measured wall time, so with a virtual clock
     latency still combines simulated queueing with real service time —
-    the same accounting the bench replay harness uses)."""
+    the same accounting the bench replay harness uses). ``outcome`` is
+    the request's terminal state: ``completed`` requests carry the full
+    submit→dispatch→done timeline; ``rejected_full`` / ``shed_deadline``
+    / ``failed`` records stamp the decision time into ``t_dispatch`` /
+    ``t_done`` with ``service_s == 0`` (no device work was billed to
+    them) and ``bucket`` the tick's bucket for failures, 0 otherwise."""
     rid: int
     t_submit: float
     t_dispatch: float
@@ -106,6 +154,31 @@ class RequestTrace:
     service_s: float
     latency_s: float
     slo_ok: bool
+    outcome: str = OUTCOME_COMPLETED
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Hysteresis thresholds for the overload degrade mode.
+
+    Enter when the queue reaches ``enter_queue`` (default: 3× the top
+    bucket) OR the last ``straggler_patience`` completed ticks were all
+    service-time spikes (``robust_zscore`` over the trailing ``window``
+    tick history exceeding ``straggler_k`` — the same median/MAD
+    statistic ``StragglerMonitor`` applies across hosts). While active,
+    ``step()`` dispatches immediately through the smallest covering
+    bucket (no SLO waiting — under sustained overload, batching up
+    latency-optimal buckets only deepens the backlog). Exit after the
+    queue has stayed at or below ``exit_queue`` (default: the top
+    bucket) with no fresh spike for ``exit_ticks`` consecutive ticks —
+    entry and exit thresholds are deliberately separated so the mode
+    cannot flap around a single watermark."""
+    enter_queue: Optional[int] = None
+    exit_queue: Optional[int] = None
+    exit_ticks: int = 3
+    straggler_k: float = 4.0
+    straggler_patience: int = 2
+    window: int = 32
 
 
 @dataclasses.dataclass
@@ -122,6 +195,9 @@ class InflightTick:
     t_launched_pc: float               # perf_counter after dispatch returned
     ready_at_pc: float                 # t_launch_pc + injected device delay
     buf_index: int
+    tick_idx: int = 0                  # global dispatch index (FaultPlan key)
+    fault: object = None               # planned TickFault for this tick
+    attempt: int = 0                   # dispatch attempts already burned
 
 
 class CNNServingEngine:
@@ -159,6 +235,18 @@ class CNNServingEngine:
     considered ready until that long after its dispatch) — a test/bench
     hook that emulates a slower real accelerator on fast-host/slow-device
     ratios CPU CI cannot otherwise produce.
+
+    Robustness knobs (all default OFF — see the module docstring for the
+    outcome/conservation model): ``max_queue`` bounds admission,
+    ``shed_deadline`` drops already-hopeless queued requests,
+    ``fault_plan`` injects deterministic per-tick faults/delays with
+    ``max_retries`` bounded re-dispatches (``retry_backoff_s`` base
+    backoff, doubling per attempt) and ``degrade`` arms the overload
+    degrade controller. ``submit()`` returns the admission verdict
+    (``"queued"`` or ``"rejected_full"``) and raises ``ValueError`` on a
+    duplicate ``rid`` — a reused rid would silently overwrite the
+    earlier result in ``done`` and corrupt ``poll()``/``drain()``
+    accounting.
     """
 
     def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
@@ -176,7 +264,13 @@ class CNNServingEngine:
                  trace_window: int = 2048,
                  mesh=None,
                  pipeline_depth: int = 1,
-                 device_delay_s: float = 0.0) -> None:
+                 device_delay_s: float = 0.0,
+                 max_queue: Optional[int] = None,
+                 shed_deadline: bool = False,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 degrade: Optional[DegradeConfig] = None) -> None:
         self.graph = graph
         self.mesh = mesh
         if pipeline_depth < 1:
@@ -184,6 +278,15 @@ class CNNServingEngine:
                 f"pipeline_depth must be >= 1, got {pipeline_depth}")
         self.pipeline_depth = int(pipeline_depth)
         self.device_delay_s = float(device_delay_s)
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.max_queue = max_queue
+        self.shed_deadline = bool(shed_deadline)
+        self.fault_plan = fault_plan
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         if mesh is not None:
             from repro.distributed.sharding import (data_shard_count,
                                                     replicated)
@@ -223,13 +326,22 @@ class CNNServingEngine:
         # donate the batched input: ticks are re-staged from host buffers
         # every dispatch, so the device-side input buffer of tick N is
         # dead the moment N's outputs exist and XLA may reuse it.
+        # Fault-plan engines thread a dispatch hook through every bucket
+        # executable (fault_plan=None threads nothing — the executables
+        # are the exact unhooked callables). The hook reads the
+        # (tick index, attempt) context the dispatch path sets around
+        # each invocation; warmup never sets one, so warmup ticks can
+        # neither consume nor trip planned faults.
+        self._fault_ctx: tuple = (None, 0)
+        hook = self._fault_hook if fault_plan is not None else None
         self._runs = {
             bucket: compile_plan(graph, plan, default_algo=default_algo,
                                  use_pallas=use_pallas, interpret=interpret,
                                  epilogue=epilogue, tuning=tuning,
                                  tuning_batch=bucket // self.data_shards,
                                  mesh=mesh,
-                                 donate=self.pipeline_depth > 1)
+                                 donate=self.pipeline_depth > 1,
+                                 fault_hook=hook)
             for bucket in self.buckets
         }
         # Rotating staging buffers sized for the largest bucket, allocated
@@ -269,6 +381,42 @@ class CNNServingEngine:
         self.submitted_total = 0
         self.served_total = 0
         self.slo_violations = 0
+        # --- robustness accounting (outcome conservation + retry/degrade
+        # bookkeeping; all zero and inert when the knobs are off).
+        self.rejected_total = 0
+        self.shed_total = 0
+        self.failed_total = 0
+        self.retries_total = 0
+        self.failed_ticks = 0
+        self.queue_high_water = 0
+        self.failed: Dict[int, int] = {}       # rid -> faulted tick index
+        self.shed_rids: Set[int] = set()
+        self._pending_rids: Set[int] = set()   # queued, not yet dispatched
+        self._inflight_rids: Set[int] = set()  # dispatched, not retired
+        # Global dispatch index (FaultPlan key): every tick that consumes
+        # requests burns one, whether or not its launch ever succeeds —
+        # fault schedules must stay aligned with the dispatch sequence.
+        self._tick_seq = 0
+        # --- degrade controller (armed only when a config is passed).
+        self._degrade_cfg = degrade
+        self._degrade_active = False
+        self._degrade_entries = 0
+        self._degrade_exits = 0
+        self._degrade_calm = 0                 # consecutive calm ticks
+        self._spikes_total = 0
+        self._spike_streak = 0
+        if degrade is not None:
+            self._enter_q = (degrade.enter_queue
+                             if degrade.enter_queue is not None
+                             else 3 * self.b)
+            self._exit_q = (degrade.exit_queue
+                            if degrade.exit_queue is not None else self.b)
+            if self._exit_q >= self._enter_q:
+                raise ValueError(
+                    f"degrade exit_queue {self._exit_q} must be below "
+                    f"enter_queue {self._enter_q} (hysteresis)")
+            self._svc_hist: Deque[float] = \
+                collections.deque(maxlen=degrade.window)
         if warmup:
             self._warmup()
 
@@ -279,21 +427,45 @@ class CNNServingEngine:
         return self._batch_bufs[0]
 
     # ------------------------------------------------------------ intake
-    def submit(self, req: CNNRequest) -> None:
-        """Enqueue one request. Images are cast to the engine dtype and
-        validated against the graph's (H, W, C) input shape here, so a bad
-        request can never crash a tick or drag good requests down with
-        it."""
+    def submit(self, req: CNNRequest) -> str:
+        """Enqueue one request; returns the admission verdict —
+        ``"queued"``, or ``"rejected_full"`` when ``max_queue`` is set
+        and already reached (the rejection is a first-class outcome:
+        counted, traced, conserved — never a silent drop). Images are
+        cast to the engine dtype and validated against the graph's
+        (H, W, C) input shape here, so a bad request can never crash a
+        tick or drag good requests down with it; a ``rid`` already live
+        anywhere in the engine (queued, in flight, completed or failed)
+        raises — a reused rid would overwrite the earlier result in
+        ``done`` and corrupt ``poll()``/``drain()`` accounting."""
         img = np.asarray(req.image, dtype=self.dtype)
         if img.shape != self._shape:
             raise ValueError(
                 f"request {req.rid}: image shape {img.shape} != "
                 f"graph input shape {self._shape}")
+        if (req.rid in self._pending_rids or req.rid in self._inflight_rids
+                or req.rid in self.done or req.rid in self.failed):
+            raise ValueError(
+                f"request {req.rid}: duplicate rid — already "
+                + ("queued" if req.rid in self._pending_rids else
+                   "in flight" if req.rid in self._inflight_rids else
+                   "completed" if req.rid in self.done else "failed"))
         req.image = img                # persist the validated array
         if req.t_submit is None:
             req.t_submit = self._clock()
         self.submitted_total += 1
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.rejected_total += 1
+            self.request_log.append(RequestTrace(
+                rid=req.rid, t_submit=req.t_submit,
+                t_dispatch=req.t_submit, t_done=req.t_submit,
+                bucket=0, queue_s=0.0, service_s=0.0, latency_s=0.0,
+                slo_ok=False, outcome=OUTCOME_REJECTED))
+            return OUTCOME_REJECTED
         self.queue.append(req)
+        self._pending_rids.add(req.rid)
+        self.queue_high_water = max(self.queue_high_water, len(self.queue))
+        return "queued"
 
     # --------------------------------------------------------- scheduling
     def covering_bucket(self, n: int) -> int:
@@ -325,7 +497,8 @@ class CNNServingEngine:
             return None
         oldest = self.queue[0]
         assert oldest.t_submit is not None
-        if self.slo_s is None or len(self.queue) >= self.b:
+        if (self.slo_s is None or self._degrade_active
+                or len(self.queue) >= self.b):
             return oldest.t_submit          # dispatch immediately
         bucket = self.covering_bucket(len(self.queue))
         wait = max(0.0, self.slo_s - self.service_estimate(bucket))
@@ -343,39 +516,156 @@ class CNNServingEngine:
         ``done`` on return; pipelined, the tick is launched asynchronously
         and retires lazily (any already-ready older ticks retire here
         first, and the oldest is force-retired when the pipeline is
-        full)."""
+        full). A tick whose planned fault exhausts ``max_retries`` still
+        returns its batch size — its requests were consumed (outcome
+        ``failed``), not left queued."""
         if self._inflight:
             self._reap()                    # lazy completion of ready ticks
+        if self._degrade_cfg is not None:
+            self._degrade_update()
         if not self.queue:
             return 0
         if now is None:
             now = self._clock()
-        if not flush and len(self.queue) < self.b:
+        if self.shed_deadline and self.slo_s is not None:
+            self._shed_hopeless(now)
+            if not self.queue:
+                return 0
+        if (not flush and len(self.queue) < self.b
+                and not self._degrade_active):
             at = self.next_dispatch_at()
             if at is not None and now < at:
                 return 0                    # wait to fill a larger bucket
         bucket = self.covering_bucket(len(self.queue))
         batch, self.queue = self.queue[:bucket], self.queue[bucket:]
+        for req in batch:
+            self._pending_rids.discard(req.rid)
+            self._inflight_rids.add(req.rid)
         if len(self._inflight) >= self.pipeline_depth:
             # Pipeline full: the next staging buffer still belongs to the
             # oldest in-flight tick — retire it (blocking) to reclaim.
             self._complete(self._inflight.popleft())
         x = self._stage(batch)
+        tick_idx = self._tick_seq
+        self._tick_seq += 1
+        fault = (self.fault_plan.get(tick_idx)
+                 if self.fault_plan is not None else None)
         t_launch = time.perf_counter()
-        out = self._runs[bucket](self.params, x[:bucket])
+        out, attempt = self._launch(bucket, x, tick_idx, fault)
         t_launched = time.perf_counter()
-        self.dispatches[bucket] += 1
-        self._dispatched_ticks += 1
         tick = InflightTick(bucket=bucket, reqs=batch, out=out,
                             t_dispatch=now, t_launch_pc=t_launch,
                             t_launched_pc=t_launched,
-                            ready_at_pc=t_launch + self.device_delay_s,
-                            buf_index=self._last_buf_index)
+                            ready_at_pc=(t_launch + self.device_delay_s
+                                         + (fault.delay_s if fault else 0.0)),
+                            buf_index=self._last_buf_index,
+                            tick_idx=tick_idx, fault=fault, attempt=attempt)
+        if out is None:
+            # Launch retries exhausted: fail cleanly — requests get their
+            # terminal outcome, the staging buffer is simply left to the
+            # normal stale-slot reclaim, and no pipeline slot was taken.
+            self._fail_tick(tick)
+            return len(batch)
+        self.dispatches[bucket] += 1
+        self._dispatched_ticks += 1
         if self.pipeline_depth == 1:
             self._complete(tick)            # synchronous: block right here
         else:
             self._inflight.append(tick)
         return len(batch)
+
+    def _launch(self, bucket: int, x: np.ndarray, tick_idx: int,
+                fault) -> tuple:
+        """Invoke the bucket executable under the fault context, retrying
+        dispatch-surfaced ``DeviceFault``s with bounded backoff. Returns
+        ``(in-flight output, attempts burned)`` — ``(None, n)`` when
+        retries are exhausted. Completion-surfaced faults never raise
+        here; ``_complete`` replays them from the pinned staging
+        buffer."""
+        attempt = 0
+        while True:
+            try:
+                self._fault_ctx = (tick_idx, attempt)
+                return self._runs[bucket](self.params, x[:bucket]), attempt
+            except DeviceFault:
+                if attempt >= self.max_retries:
+                    return None, attempt
+                self.retries_total += 1
+                self._backoff_sleep(attempt)
+                attempt += 1
+            finally:
+                self._fault_ctx = (None, 0)
+
+    def _fault_hook(self) -> None:
+        """Per-invocation dispatch hook threaded through ``compile_plan``
+        when a ``fault_plan`` is armed: raises for planned
+        dispatch-surfaced failures of the current (tick, attempt)
+        context. Delays do NOT sleep here — they ride ``ready_at_pc`` so
+        a straggling device never blocks the dispatching host."""
+        tick_idx, attempt = self._fault_ctx
+        fault = self.fault_plan.get(tick_idx)
+        if (fault is not None and fault.at_dispatch
+                and attempt < fault.failures):
+            raise DeviceFault(
+                f"injected dispatch fault: tick {tick_idx} "
+                f"attempt {attempt}")
+
+    def _backoff_sleep(self, attempt: int) -> None:
+        """Exponential backoff between retry attempts (base doubles per
+        burned attempt; base 0.0 retries immediately)."""
+        delay = self.retry_backoff_s * (2 ** attempt)
+        if delay > 0:
+            time.sleep(delay)
+
+    def _shed_hopeless(self, now: float) -> None:
+        """Drop queued requests whose SLO is already unmeetable even by
+        an immediate smallest-bucket dispatch (the cheapest measured
+        service estimate) — hopeless work must not occupy a bucket slot
+        that a still-meetable request could use. Conservative by
+        construction: with no measured estimate yet (0.0) nothing is
+        ever shed."""
+        floor = self.service_estimate(self.buckets[0])
+        if floor <= 0.0:
+            return
+        keep: List[CNNRequest] = []
+        for req in self.queue:
+            assert req.t_submit is not None
+            if (now - req.t_submit) + floor > self.slo_s:
+                self.shed_total += 1
+                self.shed_rids.add(req.rid)
+                self._pending_rids.discard(req.rid)
+                queue_s = max(0.0, now - req.t_submit)
+                self.request_log.append(RequestTrace(
+                    rid=req.rid, t_submit=req.t_submit, t_dispatch=now,
+                    t_done=now, bucket=0, queue_s=queue_s, service_s=0.0,
+                    latency_s=queue_s, slo_ok=False, outcome=OUTCOME_SHED))
+            else:
+                keep.append(req)
+        if len(keep) != len(self.queue):
+            self.queue = keep
+
+    def _degrade_update(self) -> None:
+        """Advance the degrade hysteresis one tick: enter on queue
+        pressure or a sustained straggler-spike streak; exit only after
+        ``exit_ticks`` consecutive calm ticks at or below the exit
+        watermark."""
+        cfg = self._degrade_cfg
+        q = len(self.queue)
+        if not self._degrade_active:
+            if (q >= self._enter_q
+                    or self._spike_streak >= cfg.straggler_patience):
+                self._degrade_active = True
+                self._degrade_entries += 1
+                self._degrade_calm = 0
+        else:
+            if q <= self._exit_q and self._spike_streak == 0:
+                self._degrade_calm += 1
+                if self._degrade_calm >= cfg.exit_ticks:
+                    self._degrade_active = False
+                    self._degrade_exits += 1
+                    self._degrade_calm = 0
+            else:
+                self._degrade_calm = 0
 
     # --------------------------------------------------- staging buffers
     def _stage(self, batch: List[CNNRequest]) -> np.ndarray:
@@ -412,13 +702,36 @@ class CNNServingEngine:
     def _complete(self, tick: InflightTick) -> None:
         """Blocking completion of one tick: wait for the device, unpack
         results into ``done``, update the bucket's service EMA from the
-        *device-completion* time, and write ``RequestTrace`` records."""
+        *device-completion* time, and write ``RequestTrace`` records.
+        Planned completion-surfaced faults are discovered here — the
+        async result turns out bad when blocked on — and replayed from
+        the tick's pinned staging buffer under the bounded retry budget;
+        exhaustion fails the tick cleanly (slot and buffer reclaimed,
+        EMAs untouched, later in-flight ticks unaffected)."""
         t_block = time.perf_counter()
         out = jax.block_until_ready(tick.out)
-        if self.device_delay_s:
-            remaining = tick.ready_at_pc - time.perf_counter()
-            if remaining > 0:
-                time.sleep(remaining)       # emulated device still busy
+        remaining = tick.ready_at_pc - time.perf_counter()
+        if remaining > 0:
+            time.sleep(remaining)           # emulated device still busy
+        fault = tick.fault
+        if fault is not None and not fault.at_dispatch:
+            while tick.attempt < fault.failures:
+                if tick.attempt >= self.max_retries:
+                    self._fail_tick(tick)
+                    return
+                self.retries_total += 1
+                self._backoff_sleep(tick.attempt)
+                tick.attempt += 1
+                # Replay from the pinned staging buffer — rotation
+                # guarantees it still holds exactly this tick's images.
+                x = self._batch_bufs[tick.buf_index]
+                try:
+                    self._fault_ctx = (tick.tick_idx, tick.attempt)
+                    tick.out = self._runs[tick.bucket](
+                        self.params, x[:tick.bucket])
+                finally:
+                    self._fault_ctx = (None, 0)
+                out = jax.block_until_ready(tick.out)
         t_ready = time.perf_counter()
         # Serial-device occupancy: this tick could only start once the
         # previous one finished, so its service time is completion minus
@@ -441,10 +754,13 @@ class CNNServingEngine:
         arr = np.asarray(out)
         for i, req in enumerate(tick.reqs):
             self.done[req.rid] = arr[i]
+            self._inflight_rids.discard(req.rid)
         prev = self._svc[tick.bucket]
         self._svc[tick.bucket] = (service if prev is None
                                   else 0.5 * prev + 0.5 * service)
         self.served_total += len(tick.reqs)
+        if self._degrade_cfg is not None:
+            self._observe_service(service)
         # Engine-clock completion: pipelined ticks finish no earlier than
         # the previous tick's completion (the serial device again), which
         # keeps t_done monotone across out-of-order drains. The
@@ -470,6 +786,55 @@ class CNNServingEngine:
                           "wall_s": service, "now": tick.t_dispatch,
                           "per_chip_batch": tick.bucket // self.data_shards}
 
+    def _observe_service(self, service: float) -> None:
+        """Feed one completed tick's service time to the degrade
+        controller's spike detector: robust z-score against the trailing
+        history (``distributed.fault.robust_zscore`` — median/MAD, the
+        ``StragglerMonitor`` statistic), streak-counted so only
+        *consecutive* spikes trip the degrade entry."""
+        cfg = self._degrade_cfg
+        if len(self._svc_hist) >= 5:
+            if robust_zscore(service, self._svc_hist) > cfg.straggler_k:
+                self._spikes_total += 1
+                self._spike_streak += 1
+            else:
+                self._spike_streak = 0
+        self._svc_hist.append(service)
+
+    def _fail_tick(self, tick: InflightTick) -> None:
+        """Terminal failure of one tick after its retry budget is spent:
+        every request gets outcome ``failed`` (traced, counted,
+        conserved), the pipeline slot and staging buffer return to the
+        pool, and — deliberately — the bucket's service EMA and the
+        degrade spike history are NOT updated: a failed tick produced no
+        service-time measurement, and polluting the scheduler's deadline
+        budgets with fault wall time would punish the requests that
+        follow."""
+        self.failed_ticks += 1
+        wall = max(time.perf_counter() - tick.t_launch_pc, 1e-9)
+        if tick.out is not None:
+            # The device was genuinely occupied by the doomed attempts:
+            # later ticks' serial-device service accounting must not
+            # back-date their start to before this tick ended.
+            self._last_ready_pc = max(self._last_ready_pc,
+                                      time.perf_counter())
+        t_done = tick.t_dispatch
+        for req in tick.reqs:
+            self._inflight_rids.discard(req.rid)
+            self.failed[req.rid] = tick.tick_idx
+            assert req.t_submit is not None
+            queue_s = max(0.0, tick.t_dispatch - req.t_submit)
+            self.request_log.append(RequestTrace(
+                rid=req.rid, t_submit=req.t_submit,
+                t_dispatch=tick.t_dispatch, t_done=t_done,
+                bucket=tick.bucket, queue_s=queue_s, service_s=0.0,
+                latency_s=queue_s, slo_ok=False, outcome=OUTCOME_FAILED))
+        self.failed_total += len(tick.reqs)
+        self.last_tick = {"bucket": tick.bucket, "served": 0,
+                          "wall_s": wall, "now": tick.t_dispatch,
+                          "per_chip_batch": tick.bucket // self.data_shards,
+                          "failed": True}
+
     def drain(self) -> Dict[int, np.ndarray]:
         """Retire every in-flight tick (blocking, in dispatch order) so
         ``done`` holds all dispatched results. No-op when synchronous or
@@ -481,10 +846,15 @@ class CNNServingEngine:
 
     def poll(self, rid: int) -> Optional[np.ndarray]:
         """Requester-side completion: the result for ``rid`` if its tick
-        has retired, retiring in-flight ticks (oldest first) until it is
-        found. None if ``rid`` was never dispatched (still queued, or
-        unknown)."""
-        while rid not in self.done and self._inflight:
+        has retired, retiring in-flight ticks (oldest first) until that
+        tick retires. ``None`` — with NO side effects — when ``rid`` is
+        not in flight: never submitted, still queued, rejected, shed, or
+        failed. (An unknown rid must not drain the pipeline as a side
+        effect; only a rid genuinely riding an in-flight tick forces
+        retirement, and only up to its own tick.)"""
+        if rid in self.done:
+            return self.done[rid]
+        while rid in self._inflight_rids and self._inflight:
             self._complete(self._inflight.popleft())
         return self.done.get(rid)
 
@@ -509,6 +879,29 @@ class CNNServingEngine:
         self._device_busy_s = 0.0
         self._dispatched_ticks = 0
         self._completed_ticks = 0
+        # Robustness accounting resets with the request state; measured
+        # knowledge (service EMAs, degrade spike history) is kept, and
+        # the degrade mode itself stands down — a fresh trace starts
+        # from the normal scheduling policy.
+        self.rejected_total = 0
+        self.shed_total = 0
+        self.failed_total = 0
+        self.retries_total = 0
+        self.failed_ticks = 0
+        self.queue_high_water = 0
+        self.failed.clear()
+        self.shed_rids.clear()
+        self._pending_rids.clear()
+        self._inflight_rids.clear()
+        self._degrade_active = False
+        self._degrade_entries = 0
+        self._degrade_exits = 0
+        self._degrade_calm = 0
+        self._spikes_total = 0
+        self._spike_streak = 0
+        # Fault plans are keyed by dispatch index: replays that reset the
+        # engine between traces expect the plan to re-apply from tick 0.
+        self._tick_seq = 0
 
     # ------------------------------------------------------ observability
     def stats(self) -> Dict[str, object]:
@@ -529,7 +922,11 @@ class CNNServingEngine:
                     "p99_ms": float(np.percentile(arr, 99)) * 1e3,
                     "max_ms": float(arr.max()) * 1e3}
 
-        window = list(self.request_log)
+        # Latency/queue aggregates describe COMPLETED requests only —
+        # rejected/shed/failed records carry no service leg and would
+        # drag the percentiles toward their (zero-cost) decision times.
+        window = [t for t in self.request_log
+                  if t.outcome == OUTCOME_COMPLETED]
         return {
             "submitted": self.submitted_total,
             "served": self.served_total,
@@ -569,6 +966,32 @@ class CNNServingEngine:
                 "mesh_devices": int(self.mesh.size),
                 "per_chip_batch": {b: b // self.data_shards
                                    for b in self.buckets},
+            },
+            # Overload/fault accounting. Every submitted request is
+            # conserved across the four terminal outcomes plus the
+            # not-yet-terminal pending set (queued + riding an in-flight
+            # tick): outcomes sum + pending == submitted, always.
+            "robustness": {
+                "max_queue": self.max_queue,
+                "shed_deadline": self.shed_deadline,
+                "outcomes": {
+                    OUTCOME_COMPLETED: self.served_total,
+                    OUTCOME_REJECTED: self.rejected_total,
+                    OUTCOME_SHED: self.shed_total,
+                    OUTCOME_FAILED: self.failed_total,
+                },
+                "pending": (len(self.queue)
+                            + sum(len(t.reqs) for t in self._inflight)),
+                "retries": self.retries_total,
+                "failed_ticks": self.failed_ticks,
+                "queue_high_water": self.queue_high_water,
+                "degrade": {
+                    "enabled": self._degrade_cfg is not None,
+                    "active": self._degrade_active,
+                    "entries": self._degrade_entries,
+                    "exits": self._degrade_exits,
+                    "straggler_spikes": self._spikes_total,
+                },
             },
         }
 

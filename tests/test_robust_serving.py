@@ -1,0 +1,441 @@
+"""Robust serving tier (overload + fault handling, PR 7).
+
+Pins the outcome/conservation model of ``CNNServingEngine``'s robustness
+knobs: bounded admission (``max_queue``), deadline shedding
+(``shed_deadline``), deterministic fault injection
+(``distributed.fault.FaultPlan``) with bounded retry-with-backoff, and
+the degrade-mode hysteresis controller — plus the satellite fixes
+(duplicate-rid rejection at submit, side-effect-free ``poll()`` for
+unknown rids) and the ``stats()["robustness"]`` schema. Throughout:
+every submitted request ends in exactly one terminal outcome and
+``completed + rejected_full + shed_deadline + failed + pending ==
+submitted``.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cnn.executor import init_params
+from repro.cnn.models import vgg16
+from repro.distributed.fault import FaultPlan, TickFault, robust_zscore
+from repro.serving.cnn_engine import (OUTCOME_COMPLETED, OUTCOME_FAILED,
+                                      OUTCOME_REJECTED, OUTCOME_SHED,
+                                      CNNRequest, CNNServingEngine,
+                                      DegradeConfig)
+
+RNG = np.random.default_rng(7)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = vgg16(res=8, scale=0.05)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, params
+
+
+def img():
+    return np.asarray(RNG.standard_normal((8, 8, 3)), np.float32)
+
+
+def submit_n(eng, n, start_rid=0, imgs=None, t=None):
+    reqs = [CNNRequest(rid=start_rid + i,
+                       image=imgs[i] if imgs is not None else img(),
+                       t_submit=t)
+            for i in range(n)]
+    return [eng.submit(r) for r in reqs], reqs
+
+
+def conserved(eng) -> bool:
+    rb = eng.stats()["robustness"]
+    return (sum(rb["outcomes"].values()) + rb["pending"]
+            == eng.submitted_total)
+
+
+# ----------------------------------------------------------- fault plans
+
+
+def test_fault_plan_seeded_deterministic():
+    mk = lambda: FaultPlan.seeded(seed=9, n_ticks=200, fail_rate=0.3,
+                                  failures=2, delay_rate=0.2, delay_s=0.5)
+    a, b = mk(), mk()
+    assert a.faults == b.faults and len(a) > 0
+    assert FaultPlan.seeded(seed=10, n_ticks=200,
+                            fail_rate=0.3).faults != a.faults
+    assert a.get(None) is None          # warmup ticks never consume faults
+    assert FaultPlan({}).get(0) is None
+
+
+def test_robust_zscore_is_median_mad():
+    samples = [1.0, 1.0, 2.0, 3.0, 3.0]       # median 2, MAD 1
+    assert robust_zscore(2.0, samples) == 0.0
+    assert robust_zscore(5.0, samples) == pytest.approx(3.0)
+    assert robust_zscore(1.0, []) == 0.0
+
+
+# ------------------------------------------------------------- admission
+
+
+def test_submit_verdicts_and_bounded_admission(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2, max_queue=2)
+    verdicts, _ = submit_n(eng, 3)
+    assert verdicts == ["queued", "queued", OUTCOME_REJECTED]
+    assert eng.rejected_total == 1 and len(eng.queue) == 2
+    rej = [t for t in eng.request_log if t.outcome == OUTCOME_REJECTED]
+    assert [t.rid for t in rej] == [2]
+    assert rej[0].service_s == 0.0 and not rej[0].slo_ok
+    assert conserved(eng)
+    eng.run_until_done()
+    assert set(eng.done) == {0, 1} and conserved(eng)
+    # A rejected rid never entered the engine — resubmitting it is legal.
+    assert eng.submit(CNNRequest(rid=2, image=img())) == "queued"
+    eng.run_until_done()
+    assert 2 in eng.done
+
+
+def test_duplicate_rid_rejected_at_submit(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2)
+    eng.submit(CNNRequest(rid=0, image=img()))
+    with pytest.raises(ValueError, match="duplicate rid — already queued"):
+        eng.submit(CNNRequest(rid=0, image=img()))
+    eng.run_until_done()
+    with pytest.raises(ValueError,
+                       match="duplicate rid — already completed"):
+        eng.submit(CNNRequest(rid=0, image=img()))
+    # Failed rids are terminal too — the result they'd overwrite is the
+    # failure record itself.
+    feng = CNNServingEngine(
+        g, params, None, batch_size=2, max_retries=0,
+        fault_plan=FaultPlan({0: TickFault(failures=5)}))
+    feng.submit(CNNRequest(rid=7, image=img()))
+    feng.run_until_done()
+    assert 7 in feng.failed
+    with pytest.raises(ValueError, match="duplicate rid — already failed"):
+        feng.submit(CNNRequest(rid=7, image=img()))
+
+
+# -------------------------------------------------------------- shedding
+
+
+def test_deadline_shedding_vs_completion(tiny):
+    g, params = tiny
+    clk = FakeClock()
+    eng = CNNServingEngine(g, params, None, batch_size=2, slo_s=0.05,
+                           shed_deadline=True, clock=clk, warmup=True)
+    # Request 0 arrives at t=0; by t=0.1 its 50ms budget is unmeetable
+    # even by the measured smallest-bucket floor. Request 1 is fresh.
+    eng.submit(CNNRequest(rid=0, image=img(), t_submit=0.0))
+    eng.submit(CNNRequest(rid=1, image=img(), t_submit=0.1))
+    clk.t = 0.1
+    eng.step(now=0.1, flush=True)
+    assert eng.shed_rids == {0} and eng.shed_total == 1
+    assert 0 not in eng.done and 1 in eng.done
+    traces = {t.rid: t for t in eng.request_log}
+    assert traces[0].outcome == OUTCOME_SHED
+    assert traces[0].service_s == 0.0
+    assert traces[0].latency_s == pytest.approx(0.1)
+    assert traces[1].outcome == OUTCOME_COMPLETED and traces[1].slo_ok
+    assert conserved(eng)
+
+
+def test_no_shed_without_measured_floor(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2, slo_s=1e-6,
+                           shed_deadline=True, clock=FakeClock())
+    eng.submit(CNNRequest(rid=0, image=img(), t_submit=0.0))
+    eng.step(now=100.0, flush=True)     # no estimate yet → never sheds
+    assert eng.shed_total == 0 and 0 in eng.done
+
+
+# ------------------------------------------------------- retry + failure
+
+
+def test_completion_fault_retry_recovers_bitwise(tiny):
+    g, params = tiny
+    im = img()
+    clean = CNNServingEngine(g, params, None, batch_size=2)
+    clean.submit(CNNRequest(rid=0, image=im))
+    clean.run_until_done()
+    eng = CNNServingEngine(
+        g, params, None, batch_size=2, max_retries=2,
+        fault_plan=FaultPlan({0: TickFault(failures=2)}))
+    eng.submit(CNNRequest(rid=0, image=im))
+    eng.run_until_done()
+    assert eng.retries_total == 2 and eng.failed_ticks == 0
+    assert np.array_equal(np.asarray(eng.done[0]),
+                          np.asarray(clean.done[0]))
+    assert conserved(eng)
+
+
+def test_dispatch_fault_retry_and_exhaustion(tiny):
+    g, params = tiny
+    ok = CNNServingEngine(
+        g, params, None, batch_size=2, max_retries=1,
+        fault_plan=FaultPlan(
+            {0: TickFault(failures=1, at_dispatch=True)}))
+    im = img()
+    ok.submit(CNNRequest(rid=0, image=im))
+    ok.run_until_done()
+    assert ok.retries_total == 1 and 0 in ok.done
+
+    eng = CNNServingEngine(
+        g, params, None, batch_size=2, max_retries=1,
+        fault_plan=FaultPlan(
+            {0: TickFault(failures=5, at_dispatch=True)}))
+    submit_n(eng, 2)
+    n = eng.step(now=0.0, flush=True)
+    assert n == 2                        # consumed, not left queued
+    assert eng.failed == {0: 0, 1: 0} and eng.failed_ticks == 1
+    assert eng.dispatches[2] == 0        # never successfully dispatched
+    traces = {t.rid: t for t in eng.request_log}
+    assert all(traces[r].outcome == OUTCOME_FAILED for r in (0, 1))
+    assert conserved(eng)
+    # The next tick (index 1, unplanned) is untouched by the fault.
+    submit_n(eng, 2, start_rid=2)
+    eng.run_until_done()
+    assert set(eng.done) == {2, 3} and conserved(eng)
+
+
+def test_hook_not_threaded_without_plan(tiny):
+    """fault_plan=None threads NO wrapper: compile_plan's hook shim is
+    the identity for a None hook, so a default engine's executables are
+    the exact unhooked callables (the zero-overhead guarantee)."""
+    from repro.cnn.executor import _with_fault_hook
+    sentinel = object()
+    assert _with_fault_hook(sentinel, None) is sentinel
+    calls = []
+    hooked = _with_fault_hook(lambda p, x: (p, x),
+                              lambda: calls.append(1))
+    assert hooked(1, 2) == (1, 2) and len(calls) == 1
+
+
+def test_failed_tick_does_not_pollute_service_ema(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(
+        g, params, None, batch_size=2, warmup=True, max_retries=0,
+        # The doomed tick also straggles 200ms — if its wall time leaked
+        # into the EMA the estimate would jump three orders of magnitude.
+        fault_plan=FaultPlan({0: TickFault(failures=5, delay_s=0.2)}))
+    ema_before = dict(eng.stats()["service_ema_s"])
+    submit_n(eng, 2)
+    eng.run_until_done()
+    assert eng.failed_ticks == 1
+    assert eng.stats()["service_ema_s"] == ema_before
+
+
+# --------------------------------------------- pipelined faults (depth 2)
+
+
+def test_depth2_faulted_inflight_drain(tiny):
+    """A completion-faulted tick at depth 2 fails cleanly under lazy
+    retirement: its requests get terminal outcomes, its pipeline slot and
+    staging buffer return to the pool, EMAs stay unpolluted, and the
+    surrounding in-flight ticks complete bitwise-correct."""
+    g, params = tiny
+    imgs = [img() for _ in range(6)]
+    clean = CNNServingEngine(g, params, None, batch_size=2,
+                             pipeline_depth=2, warmup=True)
+    submit_n(clean, 6, imgs=imgs)
+    clean.run_until_done()
+    eng = CNNServingEngine(
+        g, params, None, batch_size=2, pipeline_depth=2, warmup=True,
+        max_retries=1, device_delay_s=0.05,
+        fault_plan=FaultPlan({1: TickFault(failures=5, delay_s=0.2)}))
+    ema_before = dict(eng.stats()["service_ema_s"])[2]
+    submit_n(eng, 6, imgs=imgs)
+    assert eng.step(now=0.0, flush=True) == 2      # tick 0 in flight
+    assert eng.step(now=0.0, flush=True) == 2      # tick 1 (doomed)
+    assert len(eng._inflight) == 2
+    assert eng.step(now=0.0, flush=True) == 2      # forces tick 0 retire
+    eng.drain()
+    assert set(eng.done) == {0, 1, 4, 5}
+    assert eng.failed == {2: 1, 3: 1}
+    assert eng.retries_total == 1 and eng.failed_ticks == 1
+    assert len(eng._inflight) == 0
+    for r in eng.done:
+        assert np.array_equal(np.asarray(eng.done[r]),
+                              np.asarray(clean.done[r]))
+    # The 200ms fault wall never reaches the scheduler's estimates.
+    assert eng.stats()["service_ema_s"][2] < 0.1
+    assert ema_before < 0.1
+    assert conserved(eng)
+
+
+def test_depth2_reset_with_faulted_inflight_and_plan_rewind(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(
+        g, params, None, batch_size=2, pipeline_depth=2, warmup=True,
+        max_retries=0, device_delay_s=0.05,
+        fault_plan=FaultPlan({1: TickFault(failures=5)}))
+    submit_n(eng, 4)
+    eng.step(now=0.0, flush=True)
+    eng.step(now=0.0, flush=True)                  # doomed tick in flight
+    assert len(eng._inflight) == 2
+    eng.reset()                                    # drains, then clears
+    assert len(eng._inflight) == 0 and eng.submitted_total == 0
+    assert not eng.failed and not eng.done and not eng._inflight_rids
+    assert conserved(eng)
+    # reset rewinds the dispatch index, so the plan re-applies from
+    # tick 0: the second trace's tick 1 is doomed again.
+    submit_n(eng, 4)
+    eng.run_until_done()
+    assert set(eng.done) == {0, 1} and eng.failed == {2: 1, 3: 1}
+    assert conserved(eng)
+
+
+# ------------------------------------------------------------------ poll
+
+
+def test_poll_unknown_rid_has_no_side_effects(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2,
+                           pipeline_depth=2, warmup=True,
+                           device_delay_s=0.05)
+    submit_n(eng, 5)
+    eng.step(now=0.0, flush=True)
+    eng.step(now=0.0, flush=True)
+    assert len(eng._inflight) == 2 and len(eng.queue) == 1
+    assert eng.poll(99) is None                    # never submitted
+    assert eng.poll(4) is None                     # still queued
+    assert len(eng._inflight) == 2                 # nothing retired
+    # A genuinely in-flight rid retires only up to its own tick.
+    assert eng.poll(0) is not None
+    assert len(eng._inflight) == 1
+    eng.run_until_done()
+
+
+def test_poll_failed_rid_returns_none(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(
+        g, params, None, batch_size=2, pipeline_depth=2, max_retries=0,
+        fault_plan=FaultPlan({0: TickFault(failures=5)}))
+    submit_n(eng, 2)
+    eng.step(now=0.0, flush=True)
+    eng.drain()
+    assert 0 in eng.failed
+    assert eng.poll(0) is None                     # terminal, not a hang
+
+
+# --------------------------------------------------------------- degrade
+
+
+def test_degrade_config_validation(tiny):
+    g, params = tiny
+    with pytest.raises(ValueError, match="hysteresis"):
+        CNNServingEngine(g, params, None, batch_size=2,
+                         degrade=DegradeConfig(enter_queue=2, exit_queue=2))
+
+
+def test_degrade_enter_exit_hysteresis(tiny):
+    g, params = tiny
+    clk = FakeClock()
+    eng = CNNServingEngine(
+        g, params, None, batch_size=4, slo_s=10.0, warmup=True, clock=clk,
+        degrade=DegradeConfig(enter_queue=3, exit_queue=1, exit_ticks=2))
+    # Below the watermark the SLO scheduler waits to fill a bucket.
+    submit_n(eng, 1, t=0.0)
+    assert eng.step(now=0.0) == 0
+    # Queue pressure trips the entry watermark: dispatch-immediately.
+    submit_n(eng, 2, start_rid=1, t=0.0)
+    assert eng.step(now=0.0) == 3
+    rb = eng.stats()["robustness"]["degrade"]
+    assert rb["active"] and rb["entries"] == 1
+    # While degraded, even a lone request dispatches with no SLO wait...
+    submit_n(eng, 1, start_rid=3, t=0.0)
+    assert eng.step(now=0.0) == 1
+    # ...and two calm ticks at/below the exit watermark stand it down.
+    assert eng.step(now=0.0) == 0
+    assert eng.step(now=0.0) == 0
+    rb = eng.stats()["robustness"]["degrade"]
+    assert not rb["active"] and rb["exits"] == 1
+    # Restored: the SLO scheduler waits again.
+    submit_n(eng, 1, start_rid=4, t=100.0)
+    assert eng.step(now=100.0) == 0
+    eng.run_until_done()
+    assert conserved(eng)
+
+
+def test_degrade_straggler_spike_entry(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(
+        g, params, None, batch_size=1, warmup=True,
+        # One 80ms straggler against sub-ms ticks is an unambiguous
+        # spike; patience=1 arms the mode off a single streak.
+        fault_plan=FaultPlan({6: TickFault(delay_s=0.08)}),
+        degrade=DegradeConfig(enter_queue=100, exit_queue=10,
+                              straggler_k=3.0, straggler_patience=1))
+    for i in range(7):
+        eng.submit(CNNRequest(rid=i, image=img()))
+        eng.step(flush=True)
+    assert eng._spike_streak >= 1
+    eng.step()                                     # controller sees it
+    rb = eng.stats()["robustness"]["degrade"]
+    assert rb["active"] and rb["straggler_spikes"] >= 1
+    assert conserved(eng)
+
+
+# ----------------------------------------------------------------- stats
+
+
+def test_stats_robustness_schema_and_conservation(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2, max_queue=8)
+    rb = eng.stats()["robustness"]
+    assert set(rb) == {"max_queue", "shed_deadline", "outcomes",
+                       "pending", "retries", "failed_ticks",
+                       "queue_high_water", "degrade"}
+    assert set(rb["outcomes"]) == {OUTCOME_COMPLETED, OUTCOME_REJECTED,
+                                   OUTCOME_SHED, OUTCOME_FAILED}
+    assert set(rb["degrade"]) == {"enabled", "active", "entries", "exits",
+                                  "straggler_spikes"}
+    assert rb["max_queue"] == 8 and not rb["degrade"]["enabled"]
+    submit_n(eng, 3)
+    rb = eng.stats()["robustness"]
+    assert rb["pending"] == 3 and rb["queue_high_water"] == 3
+    assert conserved(eng)
+    eng.run_until_done()
+    rb = eng.stats()["robustness"]
+    assert rb["outcomes"][OUTCOME_COMPLETED] == 3 and rb["pending"] == 0
+    assert conserved(eng)
+
+
+def test_latency_window_excludes_non_completed(tiny):
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=2, max_queue=1)
+    verdicts, _ = submit_n(eng, 2)
+    assert verdicts[1] == OUTCOME_REJECTED
+    eng.run_until_done()
+    s = eng.stats()
+    # One rejected + one completed trace, but aggregates cover only the
+    # completed request — a zero-latency rejection must not deflate p99.
+    assert len(eng.request_log) == 2 and s["window"] == 1
+    assert s["latency"]["p99_ms"] > 0
+
+
+def test_default_engine_unchanged_by_robustness_plumbing(tiny):
+    """Zero-behavior-change guard: a default engine still schedules,
+    accounts and reports exactly as before — no outcome but completed,
+    verdict plumbing invisible to callers that ignore it."""
+    g, params = tiny
+    eng = CNNServingEngine(g, params, None, batch_size=4, slo_s=0.5,
+                           clock=FakeClock(), warmup=True)
+    submit_n(eng, 6, t=0.0)
+    eng.step(now=0.0)
+    eng.run_until_done()
+    assert set(eng.done) == set(range(6))
+    assert all(t.outcome == OUTCOME_COMPLETED for t in eng.request_log)
+    rb = eng.stats()["robustness"]
+    assert rb["max_queue"] is None and not rb["shed_deadline"]
+    assert rb["outcomes"][OUTCOME_COMPLETED] == 6
+    assert rb["retries"] == 0 and rb["failed_ticks"] == 0
+    assert conserved(eng)
