@@ -139,6 +139,73 @@ def replay_robust(
     return outcomes, done_at, makespan
 
 
+def replay_multi(
+    multi, traces: Dict[str, List[Tuple[float, np.ndarray]]]
+) -> Tuple[Dict[str, Dict[int, str]], Dict[str, Dict[int, float]], float]:
+    """Joint virtual-clock replay of one Poisson trace *per model*
+    through a ``MultiModelEngine`` (synchronous tenants only — the same
+    restriction the engine enforces at registration). Arrival streams
+    merge into one timeline; each joint ``step`` dispatches tenants in
+    deadline order and its measured wall time (``last_step["wall_s"]``,
+    the sum of the round's serialized ticks) advances the shared clock.
+    Every request is tracked to a terminal outcome exactly as in
+    ``replay_robust``, but per tenant. Request ids need only be unique
+    within their own tenant's trace.
+
+    Returns ``(outcomes, done_at, makespan)`` keyed by model name;
+    completion times come from the tenants' own ``RequestTrace`` logs
+    (each tenant's ``trace_window`` must cover its trace length)."""
+    events: List[Tuple[float, str, int, np.ndarray]] = []
+    for name, tr in traces.items():
+        for i, (t, img) in enumerate(tr):
+            events.append((t, name, i, img))
+    events.sort(key=lambda e: (e[0], e[1], e[2]))
+    n = len(events)
+    outcomes: Dict[str, Dict[int, str]] = {name: {} for name in traces}
+    i, now = 0, 0.0
+    while True:
+        while i < n and events[i][0] <= now + 1e-12:
+            t, name, rid, img = events[i]
+            verdict = multi.submit(
+                name, CNNRequest(rid=rid, image=img, t_submit=t))
+            if verdict == OUTCOME_REJECTED:
+                outcomes[name][rid] = OUTCOME_REJECTED
+            i += 1
+        served = multi.step(now=now)
+        for name, eng in multi.engines.items():
+            for rid in eng.shed_rids:
+                outcomes[name].setdefault(rid, OUTCOME_SHED)
+            for rid in eng.failed:
+                outcomes[name].setdefault(rid, OUTCOME_FAILED)
+            for rid in eng.done:
+                outcomes[name].setdefault(rid, OUTCOME_COMPLETED)
+        if served:
+            now += float(multi.last_step["wall_s"])
+            continue
+        if i >= n and multi.queued_total() == 0:
+            break
+        nxt = []
+        if i < n:
+            nxt.append(events[i][0])
+        at = multi.next_dispatch_at()
+        if at is not None:
+            nxt.append(at)
+        assert nxt, "multi replay stalled with requests outstanding"
+        now = max(now, min(nxt))
+    for name, tr in traces.items():
+        assert len(outcomes[name]) == len(tr), \
+            f"replay lost {len(tr) - len(outcomes[name])} requests of " \
+            f"model {name!r}"
+    done_at: Dict[str, Dict[int, float]] = {name: {} for name in traces}
+    for name, eng in multi.engines.items():
+        for t in eng.request_log:
+            if t.outcome == OUTCOME_COMPLETED:
+                done_at[name][t.rid] = t.t_done
+    ends = [t for per in done_at.values() for t in per.values()]
+    makespan = (max(ends) - events[0][0]) if ends else 0.0
+    return outcomes, done_at, makespan
+
+
 def replay_wallclock(
     eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]]
 ) -> Tuple[np.ndarray, float]:

@@ -1,0 +1,204 @@
+"""Multi-model serving benchmark (PR 8): two tenants, one engine.
+
+Registers two tenants of the SAME architecture (independent params) in
+one ``MultiModelEngine`` and replays a Poisson trace per tenant through
+the joint deadline-ordered scheduler (``_trace.replay_multi``), against
+a solo baseline where each model gets a dedicated ``CNNServingEngine``
+at the same per-model arrival rate. Three always-on gates plus one
+full-run latency gate:
+
+* ``conservation`` — each tenant's outcome ledger balances
+  (``completed + rejected_full + shed_deadline + failed + pending ==
+  submitted``) AND matches the replay's per-rid outcome map: the joint
+  scheduler must not lose, double-count or cross-wire requests between
+  tenants.
+* ``cross_model_cache_hits`` — registering tenant B hit the shared
+  ``ExecutableCache`` once per bucket: identical architectures share
+  every compiled ``(graph, plan, bucket, mesh)`` executable, the whole
+  point of hashing graphs instead of keying on object identity.
+* ``outputs_ok`` — spot-checked joint-served outputs match the eager
+  single-image reference *under each tenant's own params*: shared
+  executables must never leak one tenant's weights into another's
+  results.
+* ``p99_ratio_ok`` (full runs; CI re-checks the committed rows) — each
+  tenant's joint-served p99 is within ``P99_ENVELOPE`` × its solo p99.
+  The joint engine carries 2× the aggregate load of either solo run, so
+  this bounds the cost of co-tenancy, not noise: per-model rates sit at
+  0.25× ladder saturation, where a correct joint scheduler has slack.
+
+``--smoke`` (CI serving-smoke step) runs the tiny-graph variant and
+gates conservation + cache hits + outputs; the p99 envelope is enforced
+on the committed full-run rows by the CI schema guard (smoke-scale
+latency ratios on shared hosts are scheduling noise).
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import List
+
+REPO = Path(__file__).resolve().parents[1]
+for _p in (str(REPO), str(REPO / "src")):     # direct `python benchmarks/…`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+from benchmarks._trace import poisson_trace, replay, replay_multi
+from repro.cnn.executor import ExecutableCache, forward, init_params
+from repro.cnn.models import googlenet, vgg16
+from repro.core.dse import identify_parameters
+from repro.core.mapper import map_network
+from repro.serving.cnn_engine import (OUTCOME_COMPLETED, OUTCOME_FAILED,
+                                      OUTCOME_REJECTED, OUTCOME_SHED,
+                                      CNNServingEngine)
+from repro.serving.multi_engine import MultiModelEngine
+
+OUTCOMES = (OUTCOME_COMPLETED, OUTCOME_REJECTED, OUTCOME_SHED,
+            OUTCOME_FAILED)
+# Joint p99 per tenant must land within this factor of the same tenant
+# served alone at the same per-model rate. The joint run serves DOUBLE
+# the aggregate traffic, so >1 ratios are physics; 1.25 is tight enough
+# that a scheduler which starves one tenant or serializes badly fails.
+P99_ENVELOPE = 1.25
+PREFIX = "multi_model"
+
+
+def _p99_ms(lats) -> float:
+    return float(np.percentile(np.asarray(lats), 99)) * 1e3
+
+
+def _conserved(eng: CNNServingEngine, outcomes, n: int) -> bool:
+    """Both ledgers balance and agree: the replay's per-rid outcome map
+    and the engine's own robustness counters."""
+    rb = eng.stats()["robustness"]
+    counted = {oc: sum(1 for v in outcomes.values() if v == oc)
+               for oc in OUTCOMES}
+    return (sum(counted.values()) == n
+            and counted == rb["outcomes"]
+            and rb["pending"] == 0
+            and eng.submitted_total == n)
+
+
+def _measure(smoke: bool) -> List[str]:
+    if smoke:
+        tag, g = "vgg16_r8_smoke_x2", vgg16(res=8, scale=0.05)
+        plan, batch, n = None, 4, 12
+    else:
+        tag, g = "googlenet_r56_x2", googlenet(res=56, scale=0.25)
+        hw = identify_parameters(g, max_dim=512)
+        plan = map_network(g, hw=hw)
+        batch, n = 8, 48
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+    params = {"model_a": init_params(g, jax.random.PRNGKey(0)),
+              "model_b": init_params(g, jax.random.PRNGKey(1))}
+
+    # One shared cache for the whole bench: the probe pre-compiles the
+    # ladder, tenant A re-hits it, and the metric that matters —
+    # cross-model hits — is the hit delta across tenant B's registration.
+    cache = ExecutableCache()
+    probe = CNNServingEngine(g, params["model_a"], plan, batch_size=batch,
+                             warmup=True, cache=cache)
+    svc_top = probe.service_estimate(batch)
+    sat_rps = batch / svc_top
+    rate = 0.25 * sat_rps                     # per model; aggregate 0.5×
+    # Under sparse arrivals the SLO scheduler waits ~slo before an
+    # undersized dispatch, so solo p99 ≈ slo while the joint worst case
+    # adds one other-tenant tick: the structural ratio is 1 + svc/slo.
+    # 6× keeps that at ~1.17, inside the 1.25 envelope with real margin.
+    slo_s = 6.0 * svc_top
+
+    multi = MultiModelEngine(cache=cache)
+    multi.register_model("model_a", g, params["model_a"], plan,
+                         slo_s=slo_s, batch_size=batch, warmup=True)
+    hits_before_b = cache.hits
+    multi.register_model("model_b", g, params["model_b"], plan,
+                         slo_s=slo_s, batch_size=batch, warmup=True)
+    cross_hits = cache.hits - hits_before_b
+    buckets = multi.engines["model_a"].buckets
+
+    rows = [
+        f"{PREFIX},{tag},config,-,n_per_model,{n}",
+        f"{PREFIX},{tag},config,-,batch,{batch}",
+        f"{PREFIX},{tag},config,-,svc_ms_top,{svc_top * 1e3:.2f}",
+        f"{PREFIX},{tag},config,-,rate_rps_per_model,{rate:.2f}",
+        f"{PREFIX},{tag},config,-,slo_ms,{slo_s * 1e3:.2f}",
+        f"{PREFIX},{tag},cache,-,entries,{len(cache)}",
+        f"{PREFIX},{tag},cache,-,hits,{cache.hits}",
+        f"{PREFIX},{tag},cache,-,misses,{cache.misses}",
+        f"{PREFIX},{tag},cache,-,cross_model_hits,{cross_hits}",
+    ]
+
+    # ---- joint replay: one trace per tenant, merged timeline ----------
+    traces = {name: poisson_trace(rate, n, shape, seed=i + 1)
+              for i, name in enumerate(("model_a", "model_b"))}
+    outcomes, done_at, makespan = replay_multi(multi, traces)
+    rows.append(f"{PREFIX},{tag},joint,-,makespan_s,{makespan:.3f}")
+
+    conserved, outputs_ok = True, True
+    joint_p99 = {}
+    for name in ("model_a", "model_b"):
+        eng = multi.engines[name]
+        conserved = conserved and _conserved(eng, outcomes[name], n)
+        lats = [done_at[name][r] - traces[name][r][0]
+                for r in range(n) if r in done_at[name]]
+        joint_p99[name] = _p99_ms(lats)
+        for oc in OUTCOMES:
+            cnt = sum(1 for v in outcomes[name].values() if v == oc)
+            rows.append(f"{PREFIX},{tag},outcomes,{name},{oc},{cnt}")
+        rows.append(f"{PREFIX},{tag},joint,{name},p99_ms,"
+                    f"{joint_p99[name]:.2f}")
+        # Shared executables, private params: the joint-served result
+        # must equal the eager reference under THIS tenant's weights.
+        for rid in sorted(eng.done)[:3]:
+            ref = forward(g, params[name], traces[name][rid][1][None])
+            if not np.allclose(np.asarray(eng.done[rid]), ref[0],
+                               rtol=1e-4, atol=1e-4):
+                outputs_ok = False
+
+    # ---- solo baselines: dedicated engine per model, same rate --------
+    solo_p99 = {}
+    for name in ("model_a", "model_b"):
+        solo = CNNServingEngine(g, params[name], plan, batch_size=batch,
+                                slo_s=slo_s, warmup=True, cache=cache)
+        lat, _ = replay(solo, traces[name])
+        solo_p99[name] = _p99_ms(lat)
+        rows.append(f"{PREFIX},{tag},solo,{name},p99_ms,"
+                    f"{solo_p99[name]:.2f}")
+
+    ratio_ok = True
+    for name in ("model_a", "model_b"):
+        ratio = joint_p99[name] / solo_p99[name]
+        ratio_ok = ratio_ok and ratio <= P99_ENVELOPE
+        rows.append(f"{PREFIX},{tag},joint,{name},p99_vs_solo,"
+                    f"{ratio:.3f}")
+
+    rows.append(f"{PREFIX},{tag},summary,-,conservation,{conserved}")
+    rows.append(f"{PREFIX},{tag},summary,-,cross_model_cache_hits,"
+                f"{cross_hits >= len(buckets) and cross_hits > 0}")
+    rows.append(f"{PREFIX},{tag},summary,-,outputs_ok,{outputs_ok}")
+    rows.append(f"{PREFIX},{tag},summary,-,p99_ratio_ok,{ratio_ok}")
+    return rows
+
+
+def run(smoke: bool = False) -> List[str]:
+    return _measure(smoke)
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    out = run(smoke=smoke)
+    print("\n".join(out))
+    # Conservation, cache sharing and output isolation gate every
+    # invocation (including --smoke); the p99 co-tenancy envelope gates
+    # full runs here and the committed full-run rows in CI — smoke-scale
+    # latency ratios on shared hosts are scheduling noise.
+    hard = ["conservation", "cross_model_cache_hits", "outputs_ok"]
+    if not smoke:
+        hard.append("p99_ratio_ok")
+    for row in out:
+        f = row.split(",")
+        if f[2] == "summary" and f[4] in hard and f[5] != "True":
+            sys.exit(f"multi-model gate failed: {row}")

@@ -22,6 +22,7 @@ def main() -> None:
     import benchmarks.bench_e2e as be
     import benchmarks.bench_fused_autotune as bf
     import benchmarks.bench_layout_elision as bl
+    import benchmarks.bench_multi_model as bm
     import benchmarks.bench_pipelined_serving as bp
     import benchmarks.bench_roofline as br
     import benchmarks.bench_sharded_serving as bs
@@ -36,6 +37,7 @@ def main() -> None:
                       ("bench_sharded_serving", bs),
                       ("bench_pipelined_serving", bp),
                       ("bench_chaos_serving", bc),
+                      ("bench_multi_model", bm),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

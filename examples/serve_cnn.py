@@ -31,8 +31,17 @@ submitted request accounted completed/rejected/shed/failed — not on
 every request completing, and the ``stats()["robustness"]`` block in
 the report shows the ledger.
 
+``--models N`` (N >= 2) switches to multi-tenant serving: N copies of
+the architecture with independent params register in one
+``MultiModelEngine`` — tenant 2..N recompile nothing (shared executable
+cache) — and the same burst+trickle trace replays per tenant through
+the joint deadline-ordered scheduler. Per-tenant conservation and a
+per-tenant reference spot-check gate the run. ``--chaos`` and
+``--pipeline-depth`` are single-model-only knobs.
+
 CI's serving-smoke job runs the ``--smoke`` configuration end to end
-(plus a ``--smoke --chaos --max-queue`` variant).
+(plus ``--smoke --chaos --max-queue`` and ``--smoke --models 2``
+variants).
 """
 import argparse
 import json
@@ -67,6 +76,74 @@ def build_record(g, plan, path, buckets):
     return record
 
 
+def serve_multi(args, g, plan, record, mesh) -> None:
+    """N tenants, one engine: replay the burst+trickle trace per tenant
+    through the joint scheduler, then gate per-tenant conservation and
+    a per-tenant eager-reference spot check."""
+    from repro.cnn.executor import forward, init_params
+    from repro.serving.cnn_engine import CNNRequest
+    from repro.serving.multi_engine import MultiModelEngine
+
+    names = [f"model_{chr(ord('a') + i)}" for i in range(args.models)]
+    multi = MultiModelEngine()
+    tenant_params = {}
+    for i, name in enumerate(names):
+        tenant_params[name] = init_params(g, jax.random.PRNGKey(i))
+        kw = {"max_queue": args.max_queue} if args.max_queue else {}
+        multi.register_model(name, g, tenant_params[name], plan,
+                             slo_s=args.slo_ms / 1e3, tuning=record,
+                             batch_size=args.batch, mesh=mesh,
+                             warmup=True, **kw)
+    cs = multi.cache.stats()
+    print(f"registered {len(names)} tenants, shared cache: "
+          f"{cs['entries']} executables, {cs['hits']} hits "
+          f"({cs['hits']} compiles avoided)")
+
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+    rng = np.random.default_rng(0)
+    per = max(4, args.requests // args.models)
+    imgs = {name: rng.standard_normal((per,) + shape).astype(np.float32)
+            for name in names}
+    n_burst = max(1, (2 * per) // 3)
+    for name in names:
+        for i in range(n_burst):
+            multi.submit(name, CNNRequest(rid=i, image=imgs[name][i]))
+    rid = n_burst
+
+    def accounted() -> int:
+        return sum(len(e.done) + len(e.failed) + len(e.shed_rids)
+                   + e.rejected_total for e in multi.engines.values())
+
+    while accounted() < per * len(names):
+        if multi.step() == 0:
+            if rid < per:                          # trickle one per tenant
+                for name in names:
+                    multi.submit(name, CNNRequest(rid=rid,
+                                                  image=imgs[name][rid]))
+                rid += 1
+            elif multi.queued_total():             # waiting on SLO budget
+                at = multi.next_dispatch_at()
+                time.sleep(max(0.0, min(0.05, (at or 0) - time.monotonic())))
+                multi.step(flush=True)
+            else:
+                multi.drain()
+
+    # Shared executables must serve each tenant under its OWN weights.
+    for name in names:
+        want = np.asarray(forward(g, tenant_params[name], imgs[name][0],
+                                  plan=plan, epilogue="bias_relu"))
+        got = multi.engines[name].done[0]
+        err = float(np.max(np.abs(got - want)))
+        print(f"{name} request 0 vs eager reference: max|delta| = {err:.2e}")
+        if not np.allclose(got, want, rtol=2e-2, atol=2e-3):
+            raise SystemExit(f"{name}: engine output diverged from reference")
+        rb = multi.engines[name].stats()["robustness"]
+        if (sum(rb["outcomes"].values()) + rb["pending"]
+                != multi.engines[name].submitted_total):
+            raise SystemExit(f"{name}: request accounting failed to conserve")
+    print(json.dumps(multi.stats(), indent=2, default=str))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--res", type=int, default=56)
@@ -88,11 +165,19 @@ def main() -> None:
                     help="arm the robustness stack: seeded fault "
                          "injection + bounded retries, deadline "
                          "shedding, degrade mode")
+    ap.add_argument("--models", type=int, default=1,
+                    help="N >= 2 serves N tenants of the architecture "
+                         "(independent params) through one "
+                         "MultiModelEngine with a shared executable "
+                         "cache and joint deadline-ordered ticks")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (res 28, scale 0.1, no tuning)")
     args = ap.parse_args()
     if args.smoke:
         args.res, args.scale, args.requests = 28, 0.1, 12
+    if args.models > 1 and (args.chaos or args.pipeline_depth != 1):
+        raise SystemExit("--models is incompatible with --chaos / "
+                         "--pipeline-depth (single-model knobs)")
 
     from repro.cnn.executor import forward, init_params
     from repro.cnn.models import googlenet
@@ -112,6 +197,8 @@ def main() -> None:
         build_record(g, plan, args.record, buckets=(1, 2))
 
     mesh = make_data_mesh(n_dev) if n_dev > 1 else None
+    if args.models > 1:
+        return serve_multi(args, g, plan, record, mesh)
     robustness = {}
     if args.max_queue is not None:
         robustness["max_queue"] = args.max_queue

@@ -1,6 +1,7 @@
 """CNN substrate: Computing Unit overlay, executable layers, model-graph
 builders, eager executor + plan compiler."""
-from repro.cnn.executor import compile_plan, forward, init_params
+from repro.cnn.executor import (ExecutableCache, compile_plan, forward,
+                                graph_hash, init_params)
 from repro.cnn.models import (MODELS, alexnet, googlenet, inception_v4,
                               resnet18, vgg16)
 from repro.cnn.overlay import apply_conv

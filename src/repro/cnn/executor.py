@@ -20,9 +20,18 @@ Two execution modes:
   (see ``serving.cnn_engine.CNNServingEngine``). With ``mesh=`` the batch
   dimension additionally shards across a device mesh's data axes
   (params replicated) — same lowered program, multi-chip placement.
+
+Compiled programs never close over params (weights are call arguments), so
+they are shareable across models: ``ExecutableCache`` +
+``compile_plan(..., cache=)`` key each executable by ``(graph hash, plan,
+bucket, mesh, options)`` and hand multi-tenant engines the same compiled
+body for every tenant that shares an architecture (see
+``serving.multi_engine``).
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import warnings
 from typing import Callable, Dict, Optional, Tuple, Union
 
@@ -40,6 +49,131 @@ from repro.kernels.layouts import materialize, restore
 
 Params = Dict[int, Dict[str, jax.Array]]
 Lowering = Union[LoweredProgram, Dict[int, ConvLowering]]
+
+
+# ---------------------------------------------------------------------------
+# Shared executable cache (multi-tenant serving).
+#
+# Compiled programs close over (graph structure, plan, tuning winners,
+# compile options) — params stay call arguments — so two *models* that share
+# an architecture (same graph hash) can share every bucket executable even
+# though their weights differ. ``ExecutableCache`` is that sharing, keyed by
+# ``executable_cache_key``: (graph hash, plan fingerprint, bucket, mesh,
+# remaining compile options). ``MultiModelEngine`` passes one cache to every
+# tenant engine; the second tenant of an architecture compiles nothing.
+# ---------------------------------------------------------------------------
+
+def graph_hash(graph: Graph) -> str:
+    """Stable structural hash of a CNN graph: layer kinds, conv signatures,
+    non-conv attrs and edges — node *names* are display-only and excluded.
+    Two independently built graphs with identical structure hash equal (the
+    multi-tenant case: one architecture, many weight sets), and any
+    structural difference — a channel count, a stride, an edge — changes
+    the hash, so distinct models can never collide on a cache key."""
+    h = hashlib.sha256()
+    for nid in sorted(graph.nodes):
+        node = graph.nodes[nid]
+        c = node.conv
+        conv_sig = ("-" if c is None else
+                    f"{c.c_in}x{c.c_out}_{c.h1}x{c.h2}_{c.k1}x{c.k2}"
+                    f"_s{c.stride}_{c.pad}")
+        attrs = ";".join(f"{k}={node.attrs[k]!r}" for k in sorted(node.attrs))
+        h.update(f"n{nid}|{node.kind.value}|{conv_sig}|{attrs}\n".encode())
+    for src, dst in sorted(graph.edges):
+        h.update(f"e{src}>{dst}\n".encode())
+    return h.hexdigest()[:16]
+
+
+def _plan_fingerprint(plan: Optional[ExecutionPlan]):
+    """Content fingerprint of the parts of a plan a compiled program closes
+    over (bindings + store formats — solver diagnostics excluded)."""
+    if plan is None:
+        return None
+    return (plan.p1, plan.p2,
+            tuple(sorted((n, a.key) for n, a in plan.assignment.items())),
+            tuple(sorted((n, d.name) for n, d in plan.dataflows.items())),
+            tuple(sorted((n, f.value) for n, f in plan.store_formats.items())))
+
+
+def _tuning_fingerprint(tuning) -> Optional[str]:
+    """Content hash of a ``TuningRecord`` — records are keyed by conv
+    signature, not by graph, so the same record object (or an equal reload
+    of it) fingerprints equal and lets tenants share tuned executables."""
+    if tuning is None:
+        return None
+    blob = json.dumps(tuning.to_json(), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _mesh_fingerprint(mesh):
+    if mesh is None:
+        return None
+    return (tuple(str(a) for a in mesh.axis_names),
+            tuple(int(s) for s in mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def executable_cache_key(graph: Graph, plan: Optional[ExecutionPlan] = None,
+                         *, default_algo: Algorithm = IM2COL,
+                         use_pallas: bool = False,
+                         interpret: Optional[bool] = None,
+                         epilogue: str = "relu",
+                         tuning=None,
+                         tuning_batch: Optional[int] = None,
+                         avg_pool_via: str = "jnp",
+                         elide: bool = True,
+                         elide_overrides: Optional[Dict[Tuple[int, int],
+                                                        bool]] = None,
+                         mesh=None,
+                         donate: bool = False) -> tuple:
+    """The ``(graph hash, plan, bucket, mesh, options)`` identity of one
+    compiled executable: everything ``compile_plan`` closes over EXCEPT
+    params (call arguments — weights never key the cache) and
+    ``fault_hook`` (a host-side wrapper applied outside the cache, so a
+    fault-armed engine and a clean one still share the compiled body)."""
+    return (graph_hash(graph), _plan_fingerprint(plan), default_algo.key,
+            bool(use_pallas), interpret, epilogue,
+            _tuning_fingerprint(tuning), int(tuning_batch or 1),
+            avg_pool_via, bool(elide),
+            (None if elide_overrides is None
+             else tuple(sorted(elide_overrides.items()))),
+            _mesh_fingerprint(mesh), bool(donate))
+
+
+class ExecutableCache:
+    """Process-wide cache of compiled overlay programs, shared across
+    serving engines (the multi-tenant executable cache — ROADMAP's f-CNNx
+    direction). ``get_or_compile`` returns the cached callable for a key or
+    builds-and-stores it; hit/miss counters feed ``stats()`` and the
+    ``bench_multi_model`` cross-model-reuse gate. Entries are never evicted
+    — one entry per (architecture, plan, bucket, mesh, options) is exactly
+    the working set a serving process needs resident."""
+
+    def __init__(self) -> None:
+        self._store: Dict[tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_compile(self, key: tuple,
+                       builder: Callable[[], Callable]) -> Callable:
+        run = self._store.get(key)
+        if run is not None:
+            self.hits += 1
+            return run
+        self.misses += 1
+        run = builder()
+        self._store[key] = run
+        return run
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._store
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._store), "hits": self.hits,
+                "misses": self.misses}
 
 
 class _Staged:
@@ -232,6 +366,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  mesh=None,
                  donate: bool = False,
                  fault_hook: Optional[Callable[[], None]] = None,
+                 cache: Optional[ExecutableCache] = None,
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
@@ -300,7 +435,52 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     schedule through this hook and wraps the call in a bounded
     retry-with-backoff loop; ``fault_hook=None`` (default) adds no
     wrapper at all.
+
+    ``cache`` (an ``ExecutableCache``) makes compilation shared: the call
+    first looks up ``executable_cache_key(...)`` — (graph hash, plan
+    fingerprint, bucket, mesh, compile options; params and ``fault_hook``
+    excluded) — and only compiles on a miss. Two models with the same
+    architecture (equal ``graph_hash``) under the same plan/tuning/options
+    therefore share ONE compiled program per bucket; the fault hook is
+    wrapped *around* the cached body, so fault-armed and clean engines
+    share too. ``cache=None`` (default) compiles unconditionally.
     """
+    if cache is not None:
+        key = executable_cache_key(
+            graph, plan, default_algo=default_algo, use_pallas=use_pallas,
+            interpret=interpret, epilogue=epilogue, tuning=tuning,
+            tuning_batch=tuning_batch, avg_pool_via=avg_pool_via,
+            elide=elide, elide_overrides=elide_overrides, mesh=mesh,
+            donate=donate)
+        base = cache.get_or_compile(key, lambda: _compile_plan_base(
+            graph, plan, default_algo=default_algo, use_pallas=use_pallas,
+            interpret=interpret, epilogue=epilogue, tuning=tuning,
+            tuning_batch=tuning_batch, avg_pool_via=avg_pool_via,
+            elide=elide, elide_overrides=elide_overrides, mesh=mesh,
+            donate=donate))
+        return _with_fault_hook(base, fault_hook)
+    return _with_fault_hook(
+        _compile_plan_base(graph, plan, default_algo=default_algo,
+                           use_pallas=use_pallas, interpret=interpret,
+                           epilogue=epilogue, tuning=tuning,
+                           tuning_batch=tuning_batch,
+                           avg_pool_via=avg_pool_via, elide=elide,
+                           elide_overrides=elide_overrides, mesh=mesh,
+                           donate=donate),
+        fault_hook)
+
+
+def _compile_plan_base(graph: Graph, plan: Optional[ExecutionPlan], *,
+                       default_algo: Algorithm, use_pallas: bool,
+                       interpret: Optional[bool], epilogue: str,
+                       tuning, tuning_batch: Optional[int],
+                       avg_pool_via: str, elide: bool,
+                       elide_overrides: Optional[Dict[Tuple[int, int], bool]],
+                       mesh, donate: bool
+                       ) -> Callable[[Params, jax.Array], jax.Array]:
+    """The hookless compile body ``compile_plan`` caches: lower, trace,
+    jit, (optionally) shard — everything except the per-engine fault-hook
+    wrapper, which must never be shared between engines."""
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
                           batch=tuning_batch, elide=elide,
@@ -312,10 +492,8 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                            avg_pool_via)
 
     if mesh is None:
-        return _with_fault_hook(
-            _quiet_donation(jax.jit(_run, donate_argnums=donate_argnums),
-                            donate),
-            fault_hook)
+        return _quiet_donation(jax.jit(_run, donate_argnums=donate_argnums),
+                               donate)
 
     from repro.distributed.sharding import (batch_input_sharding,
                                             data_shard_count, replicated)
@@ -340,7 +518,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
 
     run.mesh = mesh
     run.data_shards = n_shards
-    return _with_fault_hook(run, fault_hook)
+    return run
 
 
 def _with_fault_hook(run: Callable, fault_hook: Optional[Callable[[], None]]

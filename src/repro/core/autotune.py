@@ -217,6 +217,29 @@ class TuningRecord:
     def load(cls, path) -> "TuningRecord":
         return cls.from_json(json.loads(Path(path).read_text()))
 
+    # -------------------------------------------------------------- merge
+    def merge(self, other: "TuningRecord") -> int:
+        """Fold ``other``'s entries into this record, keeping existing
+        entries on key conflicts (this record's measurements are the
+        incumbents — remeasure and overwrite explicitly if you want the
+        challenger). Because keys are (conv signature, bucket) — never
+        graph identity — this is how tuning transfers across models: a
+        fleet can pool the records of every tenant and each engine sees
+        the union of all measured winners. Returns the number of entries
+        adopted. ``meta`` keys absent here are copied over too."""
+        adopted = 0
+        for key, tuned in other.entries.items():
+            if key not in self.entries:
+                self.entries[key] = tuned
+                adopted += 1
+        for k, v in other.meta.items():
+            if k == "buckets":
+                mine = set(self.meta.get("buckets", []))
+                self.meta["buckets"] = sorted(mine | set(v))
+            else:
+                self.meta.setdefault(k, v)
+        return adopted
+
 
 # ---------------------------------------------------------------------------
 # Candidate generation.
@@ -336,6 +359,37 @@ def tune_layer(conv: ConvMeta, *,
         best = (baseline, base_s)
     return LayerTuning(binding=best[0], measured_s=best[1],
                        candidates=results, batch=int(batch or 1))
+
+
+def signature_coverage(graph: Graph, record: TuningRecord,
+                       buckets: Sequence[int] = (1,)
+                       ) -> Dict[str, List[str]]:
+    """How well ``record`` covers ``graph``'s unique conv signatures at
+    the given batch ``buckets`` — the cross-model reuse report: before
+    registering a new tenant, this says which of its layers ride existing
+    measured winners and which would fall back or run untuned.
+
+    Returns record keys ("sig@bN") partitioned into ``exact`` (entry
+    measured at that bucket), ``fallback`` (served by a neighboring
+    bucket's entry via ``lookup``'s bucket fallback) and ``missing`` (no
+    entry for the signature at all — the model's untuned layers)."""
+    out: Dict[str, List[str]] = {"exact": [], "fallback": [], "missing": []}
+    seen = set()
+    for node in graph.conv_nodes():
+        for bucket in buckets:
+            key = record_key(node.conv, bucket)
+            if key in seen:
+                continue
+            seen.add(key)
+            if key in record.entries:
+                out["exact"].append(key)
+            elif record.lookup(node.conv, bucket) is not None:
+                out["fallback"].append(key)
+            else:
+                out["missing"].append(key)
+    for keys in out.values():
+        keys.sort()
+    return out
 
 
 def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,

@@ -247,6 +247,13 @@ class CNNServingEngine:
     duplicate ``rid`` — a reused rid would silently overwrite the
     earlier result in ``done`` and corrupt ``poll()``/``drain()``
     accounting.
+
+    ``cache`` (an ``ExecutableCache``) shares compiled bucket executables
+    across engines: tenants of the multi-model engine whose graphs hash
+    equal reuse one jitted program per ``(graph, plan, bucket, mesh)``
+    instead of recompiling. Safe because compiled programs take params as
+    call arguments (nothing model-specific is closed over); per-engine
+    fault hooks wrap *outside* the cached callable.
     """
 
     def __init__(self, graph: Graph, params, plan: Optional[ExecutionPlan],
@@ -270,9 +277,11 @@ class CNNServingEngine:
                  fault_plan: Optional[FaultPlan] = None,
                  max_retries: int = 2,
                  retry_backoff_s: float = 0.0,
-                 degrade: Optional[DegradeConfig] = None) -> None:
+                 degrade: Optional[DegradeConfig] = None,
+                 cache=None) -> None:
         self.graph = graph
         self.mesh = mesh
+        self.cache = cache
         if pipeline_depth < 1:
             raise ValueError(
                 f"pipeline_depth must be >= 1, got {pipeline_depth}")
@@ -341,7 +350,7 @@ class CNNServingEngine:
                                  tuning_batch=bucket // self.data_shards,
                                  mesh=mesh,
                                  donate=self.pipeline_depth > 1,
-                                 fault_hook=hook)
+                                 fault_hook=hook, cache=cache)
             for bucket in self.buckets
         }
         # Rotating staging buffers sized for the largest bucket, allocated
@@ -455,17 +464,36 @@ class CNNServingEngine:
             req.t_submit = self._clock()
         self.submitted_total += 1
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            self.rejected_total += 1
-            self.request_log.append(RequestTrace(
-                rid=req.rid, t_submit=req.t_submit,
-                t_dispatch=req.t_submit, t_done=req.t_submit,
-                bucket=0, queue_s=0.0, service_s=0.0, latency_s=0.0,
-                slo_ok=False, outcome=OUTCOME_REJECTED))
-            return OUTCOME_REJECTED
+            return self._record_rejection(req)
         self.queue.append(req)
         self._pending_rids.add(req.rid)
         self.queue_high_water = max(self.queue_high_water, len(self.queue))
         return "queued"
+
+    def reject(self, req: CNNRequest) -> str:
+        """Externally imposed admission rejection — the multi-model
+        engine's *global* queue cap lands here: the request is counted
+        as submitted and rejected in THIS engine's ledger (traced,
+        conserved — a cap above the engine must not break the per-tenant
+        conservation invariant), without entering the queue. Like a
+        ``max_queue`` rejection, the rid never entered the engine and may
+        be resubmitted."""
+        if req.t_submit is None:
+            req.t_submit = self._clock()
+        self.submitted_total += 1
+        return self._record_rejection(req)
+
+    def _record_rejection(self, req: CNNRequest) -> str:
+        """Stamp one rejection into the ledger (counter + trace): the
+        shared tail of ``submit()``'s bounded-admission path and the
+        external ``reject()`` path."""
+        self.rejected_total += 1
+        self.request_log.append(RequestTrace(
+            rid=req.rid, t_submit=req.t_submit,
+            t_dispatch=req.t_submit, t_done=req.t_submit,
+            bucket=0, queue_s=0.0, service_s=0.0, latency_s=0.0,
+            slo_ok=False, outcome=OUTCOME_REJECTED))
+        return OUTCOME_REJECTED
 
     # --------------------------------------------------------- scheduling
     def covering_bucket(self, n: int) -> int:
@@ -504,6 +532,32 @@ class CNNServingEngine:
         wait = max(0.0, self.slo_s - self.service_estimate(bucket))
         return oldest.t_submit + wait
 
+    def oldest_deadline(self) -> Optional[float]:
+        """Deadline of the oldest queued request (``t_submit + slo_s``, or
+        bare ``t_submit`` with no SLO) — None when the queue is empty. The
+        multi-model scheduler orders due tenants by this: earliest
+        deadline across models dispatches first."""
+        if not self.queue:
+            return None
+        oldest = self.queue[0]
+        assert oldest.t_submit is not None
+        if self.slo_s is None:
+            return oldest.t_submit
+        return oldest.t_submit + self.slo_s
+
+    def dispatch_due(self, now: float) -> bool:
+        """True when ``step(now)`` would dispatch rather than wait: a full
+        largest bucket, active degrade mode (batching for latency is
+        pointless under overload), or the SLO wait budget of the oldest
+        request is spent. The per-model policy predicate the joint
+        multi-model scheduler consults without mutating engine state."""
+        if not self.queue:
+            return False
+        if len(self.queue) >= self.b or self._degrade_active:
+            return True
+        at = self.next_dispatch_at()
+        return at is None or now >= at
+
     # ------------------------------------------------------------- serve
     def step(self, now: Optional[float] = None, flush: bool = False) -> int:
         """One engine tick. Picks the smallest bucket covering the queue;
@@ -518,7 +572,11 @@ class CNNServingEngine:
         first, and the oldest is force-retired when the pipeline is
         full). A tick whose planned fault exhausts ``max_retries`` still
         returns its batch size — its requests were consumed (outcome
-        ``failed``), not left queued."""
+        ``failed``), not left queued.
+
+        Structured as housekeeping → wait policy (``dispatch_due``) →
+        ``_dispatch_tick``; the multi-model engine reuses the same pieces
+        but ranks tenants between the policy check and the dispatch."""
         if self._inflight:
             self._reap()                    # lazy completion of ready ticks
         if self._degrade_cfg is not None:
@@ -531,11 +589,15 @@ class CNNServingEngine:
             self._shed_hopeless(now)
             if not self.queue:
                 return 0
-        if (not flush and len(self.queue) < self.b
-                and not self._degrade_active):
-            at = self.next_dispatch_at()
-            if at is not None and now < at:
-                return 0                    # wait to fill a larger bucket
+        if not flush and not self.dispatch_due(now):
+            return 0                        # wait to fill a larger bucket
+        return self._dispatch_tick(now)
+
+    def _dispatch_tick(self, now: float) -> int:
+        """The tick core: carve the covering bucket off the queue, stage,
+        launch (with fault retry), and either complete synchronously or
+        enqueue the in-flight tick. Callers are responsible for the wait
+        policy — this always dispatches."""
         bucket = self.covering_bucket(len(self.queue))
         batch, self.queue = self.queue[:bucket], self.queue[bucket:]
         for req in batch:

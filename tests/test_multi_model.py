@@ -1,0 +1,310 @@
+"""Multi-tenant serving tier (PR 8).
+
+Pins the shared-executable-cache contract (``graph_hash`` /
+``executable_cache_key`` / ``ExecutableCache`` — identical architectures
+share compiled programs, differing ones never collide), the
+cross-model tuning-reuse helpers (``TuningRecord.merge``,
+``signature_coverage``) and the ``MultiModelEngine`` joint scheduler:
+per-tenant outcome conservation under joint serving, deadline-ordered
+tenant ticks, the global queue cap rejecting into the owning tenant's
+ledger, and the global per-step wall budget.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cnn.executor import (ExecutableCache, compile_plan,
+                                executable_cache_key, forward, graph_hash,
+                                init_params)
+from repro.cnn.models import vgg16
+from repro.core.autotune import (Binding, LayerTuning, TuningRecord,
+                                 record_key, signature_coverage)
+from repro.serving.cnn_engine import (OUTCOME_COMPLETED, OUTCOME_REJECTED,
+                                      CNNRequest, CNNServingEngine)
+from repro.serving.multi_engine import MultiModelEngine
+
+RNG = np.random.default_rng(13)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = vgg16(res=8, scale=0.05)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, params
+
+
+def img():
+    return np.asarray(RNG.standard_normal((8, 8, 3)), np.float32)
+
+
+def conserved(eng) -> bool:
+    rb = eng.stats()["robustness"]
+    return (sum(rb["outcomes"].values()) + rb["pending"]
+            == eng.submitted_total)
+
+
+# ---------------------------------------------------------------------------
+# Graph hashing + executable cache.
+# ---------------------------------------------------------------------------
+
+class TestGraphHash:
+    def test_independent_builds_hash_equal(self):
+        # Node names/ids are construction artifacts, not architecture.
+        assert graph_hash(vgg16(res=8, scale=0.05)) == \
+            graph_hash(vgg16(res=8, scale=0.05))
+
+    def test_structural_difference_changes_hash(self):
+        base = graph_hash(vgg16(res=8, scale=0.05))
+        assert graph_hash(vgg16(res=8, scale=0.1)) != base     # widths
+        assert graph_hash(vgg16(res=16, scale=0.05)) != base   # resolution
+
+    def test_cache_key_differs_for_differing_graphs(self, tiny):
+        g, _ = tiny
+        other = vgg16(res=8, scale=0.1)
+        for bucket in (1, 2, 4):
+            assert executable_cache_key(g, None, tuning_batch=bucket) != \
+                executable_cache_key(other, None, tuning_batch=bucket)
+
+    def test_cache_key_distinguishes_buckets_and_options(self, tiny):
+        g, _ = tiny
+        k = executable_cache_key(g, None, tuning_batch=2)
+        assert executable_cache_key(g, None, tuning_batch=4) != k
+        assert executable_cache_key(g, None, tuning_batch=2,
+                                    epilogue="relu") != \
+            executable_cache_key(g, None, tuning_batch=2,
+                                 epilogue="bias_relu")
+        assert executable_cache_key(g, None, tuning_batch=2,
+                                    donate=True) != k
+
+
+class TestExecutableCache:
+    def test_identical_graphs_share_executable(self, tiny):
+        g, params = tiny
+        cache = ExecutableCache()
+        g2 = vgg16(res=8, scale=0.05)        # independent build, same arch
+        r1 = compile_plan(g, None, cache=cache)
+        r2 = compile_plan(g2, None, cache=cache)
+        assert r1 is r2
+        assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+
+    def test_shared_executable_private_params(self, tiny):
+        g, pa = tiny
+        pb = init_params(g, jax.random.PRNGKey(1))
+        cache = ExecutableCache()
+        run = compile_plan(g, None, cache=cache)
+        x = img()[None]
+        ya, yb = np.asarray(run(pa, x)), np.asarray(run(pb, x))
+        assert not np.allclose(ya, yb)       # params are call args
+        assert np.allclose(ya, forward(g, pa, x), rtol=1e-4, atol=1e-4)
+
+    def test_differing_graphs_get_separate_entries(self, tiny):
+        g, _ = tiny
+        cache = ExecutableCache()
+        compile_plan(g, None, cache=cache)
+        compile_plan(vgg16(res=8, scale=0.1), None, cache=cache)
+        assert len(cache) == 2
+        assert cache.misses == 2 and cache.hits == 0
+
+    def test_engines_share_bucket_ladder_through_cache(self, tiny):
+        g, pa = tiny
+        pb = init_params(g, jax.random.PRNGKey(1))
+        cache = ExecutableCache()
+        ea = CNNServingEngine(g, pa, None, batch_size=4, cache=cache)
+        misses_after_a = cache.misses
+        eb = CNNServingEngine(vgg16(res=8, scale=0.05), pb, None,
+                              batch_size=4, cache=cache)
+        assert cache.misses == misses_after_a    # B compiled nothing
+        assert cache.hits >= len(ea.buckets)
+        for b in ea.buckets:
+            assert ea._runs[b] is eb._runs[b]
+
+
+# ---------------------------------------------------------------------------
+# Cross-model tuning reuse.
+# ---------------------------------------------------------------------------
+
+def _entry(conv, bucket, measured_s=1e-3):
+    b = Binding("im2col", "NS", 64, 64, "reference")
+    return record_key(conv, bucket), LayerTuning(b, measured_s, [],
+                                                 batch=bucket)
+
+
+class TestTuningReuse:
+    def test_signature_coverage_partition(self, tiny):
+        g, _ = tiny
+        conv = next(iter(g.conv_nodes())).conv
+        key, ent = _entry(conv, 2)
+        rec = TuningRecord({key: ent})
+        cov = signature_coverage(g, rec, buckets=(2, 4))
+        assert cov["exact"] == [key]
+        # Bucket 4 rides the bucket-2 entry via lookup's fallback.
+        assert cov["fallback"] == [record_key(conv, 4)]
+        assert cov["missing"]                 # untuned signatures remain
+        total = sum(len(v) for v in cov.values())
+        assert total == len({record_key(n.conv, b)
+                             for n in g.conv_nodes() for b in (2, 4)})
+
+    def test_identical_signatures_same_key(self):
+        # Two independently built identical architectures share tuning
+        # keys outright — the record transfers with no merge logic.
+        c1 = next(iter(vgg16(res=8, scale=0.05).conv_nodes())).conv
+        c2 = next(iter(vgg16(res=8, scale=0.05).conv_nodes())).conv
+        assert record_key(c1, 4) == record_key(c2, 4)
+
+    def test_merge_keeps_incumbents_adopts_new(self, tiny):
+        g, _ = tiny
+        convs = [n.conv for n in g.conv_nodes()]
+        k0, e0 = _entry(convs[0], 2, measured_s=1e-3)
+        mine = TuningRecord({k0: e0}, meta={"buckets": [2]})
+        k0b, e0b = _entry(convs[0], 2, measured_s=9e-3)
+        k1, e1 = _entry(convs[-1], 4, measured_s=2e-3)
+        theirs = TuningRecord({k0b: e0b, k1: e1},
+                              meta={"buckets": [2, 4], "backend": "cpu"})
+        assert mine.merge(theirs) == 1
+        assert mine.entries[k0].measured_s == 1e-3   # incumbent kept
+        assert mine.entries[k1].measured_s == 2e-3   # challenger adopted
+        assert mine.meta["buckets"] == [2, 4]
+        assert mine.meta["backend"] == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# MultiModelEngine.
+# ---------------------------------------------------------------------------
+
+def _multi(g, clock=None, **kw):
+    pa = init_params(g, jax.random.PRNGKey(0))
+    pb = init_params(g, jax.random.PRNGKey(1))
+    multi = MultiModelEngine(clock=clock or FakeClock(), **kw)
+    multi.register_model("a", g, pa, None, batch_size=4)
+    multi.register_model("b", g, pb, None, batch_size=4)
+    return multi, pa, pb
+
+
+class TestMultiModelEngine:
+    def test_joint_serving_conserves_and_isolates(self, tiny):
+        g, _ = tiny
+        multi, pa, pb = _multi(g)
+        imgs = {n: [img() for _ in range(3)] for n in ("a", "b")}
+        for name in ("a", "b"):
+            for i, im in enumerate(imgs[name]):
+                assert multi.submit(name, CNNRequest(
+                    rid=i, image=im, t_submit=0.0)) == "queued"
+        done = multi.run_until_done()
+        for name, params in (("a", pa), ("b", pb)):
+            assert sorted(done[name]) == [0, 1, 2]
+            assert conserved(multi.engines[name])
+            ref = forward(g, params, imgs[name][0][None])
+            assert np.allclose(done[name][0], ref[0], rtol=1e-4, atol=1e-4)
+
+    def test_registration_shares_cache(self, tiny):
+        g, _ = tiny
+        multi, *_ = _multi(g)
+        st = multi.stats()
+        assert st["cache"]["hits"] >= len(multi.engines["a"].buckets)
+        assert st["global"]["models"] == 2
+
+    def test_deadline_order_across_tenants(self, tiny):
+        g, _ = tiny
+        clk = FakeClock()
+        multi, *_ = _multi(g, clock=clk)
+        multi.engines["a"].slo_s = 1.0
+        multi.engines["b"].slo_s = 0.1     # tighter SLO: due first
+        multi.submit("a", CNNRequest(rid=0, image=img(), t_submit=0.0))
+        multi.submit("b", CNNRequest(rid=0, image=img(), t_submit=0.0))
+        assert multi.engines["b"].oldest_deadline() < \
+            multi.engines["a"].oldest_deadline()
+        multi.step(now=5.0, flush=True)
+        # b's tighter deadline dispatched first: its trace shows an
+        # earlier dispatch timestamp (a's tick waited behind b's).
+        tb = multi.engines["b"].request_log[-1]
+        ta = multi.engines["a"].request_log[-1]
+        assert tb.t_dispatch <= ta.t_dispatch
+
+    def test_global_queue_cap_rejects_into_tenant_ledger(self, tiny):
+        g, _ = tiny
+        multi, *_ = _multi(g, global_max_queue=2)
+        assert multi.submit("a", CNNRequest(
+            rid=0, image=img(), t_submit=0.0)) == "queued"
+        assert multi.submit("b", CNNRequest(
+            rid=0, image=img(), t_submit=0.0)) == "queued"
+        verdict = multi.submit("a", CNNRequest(
+            rid=1, image=img(), t_submit=0.0))
+        assert verdict == OUTCOME_REJECTED
+        ea = multi.engines["a"]
+        assert ea.submitted_total == 2 and ea.rejected_total == 1
+        assert ea.request_log[-1].outcome == OUTCOME_REJECTED
+        multi.run_until_done()
+        assert all(conserved(e) for e in multi.engines.values())
+
+    def test_global_budget_limits_ticks_per_step(self, tiny):
+        g, _ = tiny
+        multi, *_ = _multi(g, global_budget_s=1e-12)
+        for name in ("a", "b"):
+            multi.engines[name]._warmup()   # prime service estimates
+            multi.submit(name, CNNRequest(rid=0, image=img(),
+                                          t_submit=0.0))
+        multi.step(now=5.0)
+        # The first due tick always runs; the second tenant's estimated
+        # tick blows the (absurdly small) budget and waits a round.
+        assert multi.last_step["ticks"] == 1
+        assert len(multi.last_step["skipped"]) == 1
+        multi.step(now=5.0)
+        assert multi.last_step["ticks"] == 1
+        assert multi.queued_total() == 0
+        assert all(conserved(e) for e in multi.engines.values())
+
+    def test_flush_ignores_budget(self, tiny):
+        g, _ = tiny
+        multi, *_ = _multi(g, global_budget_s=1e-12)
+        for name in ("a", "b"):
+            multi.submit(name, CNNRequest(rid=0, image=img(),
+                                          t_submit=0.0))
+        multi.step(now=5.0, flush=True)
+        assert multi.last_step["ticks"] == 2
+        assert multi.last_step["skipped"] == ()
+
+    def test_duplicate_registration_raises(self, tiny):
+        g, params = tiny
+        multi = MultiModelEngine(clock=FakeClock())
+        multi.register_model("a", g, params, None, batch_size=4)
+        with pytest.raises(ValueError, match="already registered"):
+            multi.register_model("a", g, params, None, batch_size=4)
+
+    def test_reserved_kwargs_and_pipelining_rejected(self, tiny):
+        g, params = tiny
+        multi = MultiModelEngine(clock=FakeClock())
+        with pytest.raises(ValueError, match="clock"):
+            multi.register_model("a", g, params, None,
+                                 clock=FakeClock())
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            multi.register_model("a", g, params, None, pipeline_depth=2)
+
+    def test_unknown_model_raises(self, tiny):
+        g, params = tiny
+        multi = MultiModelEngine(clock=FakeClock())
+        multi.register_model("a", g, params, None, batch_size=4)
+        with pytest.raises(KeyError, match="unknown model"):
+            multi.submit("nope", CNNRequest(rid=0, image=img()))
+
+    def test_stats_schema(self, tiny):
+        g, _ = tiny
+        multi, *_ = _multi(g)
+        multi.submit("a", CNNRequest(rid=0, image=img(), t_submit=0.0))
+        multi.run_until_done()
+        st = multi.stats()
+        assert set(st) == {"models", "cache", "global"}
+        assert set(st["models"]) == {"a", "b"}
+        # Per-model stats keep the single-engine schema verbatim.
+        assert st["models"]["a"]["submitted"] == 1
+        assert "robustness" in st["models"]["a"]
+        assert st["global"]["submitted"] == 1
+        assert st["global"]["queued"] == 0
