@@ -1,0 +1,152 @@
+"""Mixed-precision (int8 overlay) vs all-bf16 benchmark (PR 9).
+
+Two compiled variants of the same network, measured end-to-end over the
+batch bucket ladder on reduced GoogleNet:
+
+* ``bf16``  — ``map_network(g)``: the plan every PR before this one
+  executed, all layers at the overlay's native precision;
+* ``mixed`` — ``plan_mixed_precision(...)``: the precision-aware PBQP
+  (int8 replicas priced with ``V5E_INT8``, boundary-conversion edge
+  costs) with the accuracy gate armed — layers whose isolated int8 error
+  exceeds the tolerance are demoted back to bf16 before the plan is
+  finalized, so the committed plan is the one the gate would actually
+  ship.
+
+Both variants compute the same function up to quantization error, so
+outputs must agree within the gate's tolerance (``outputs_ok``), every
+int8 layer's isolated error must sit inside the gate (``accuracy_ok``),
+and the mixed program must be no slower end-to-end (``no_slower``: the
+summed median wall clock of one tick per bucket across the whole ladder,
+within a 10% noise envelope — on CPU interpret/emulation backends int8
+brings no machine speedup, so the gate asserts the quantized lowering
+costs nothing, while the ``V5E_INT8`` cost model carries the >=1.5x
+predicted win). The full run additionally asserts the PBQP actually
+mixes precisions on GoogleNet (``precision_spread_ok``: >=1 int8 AND
+>=1 bf16 layer — Winograd-winning layers must stay bf16).
+
+Run standalone (``python benchmarks/bench_quantized.py``) or via
+``benchmarks/run.py``; ``--smoke`` runs a tiny graph in seconds for CI.
+"""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.cnn.executor import compile_plan, init_params
+from repro.cnn.models import googlenet, vgg16
+from repro.core.dse import identify_parameters
+from repro.core.mapper import map_network
+from repro.core.quant import plan_mixed_precision
+
+try:                                    # package mode (benchmarks.run)
+    from benchmarks._timing import sampled_interleaved
+except ImportError:                     # script mode (python benchmarks/x.py)
+    from _timing import sampled_interleaved
+
+# Gate tolerance: a strict 1.2% isolated-layer error budget
+# (mean|int8 - f32| over the median |f32| output magnitude). On reduced
+# GoogleNet the per-layer errors straddle this line, so the committed
+# plan exercises BOTH sides of the gate — most layers stay int8, the
+# noisiest demote to bf16 — which is exactly the mixed regime the
+# precision-aware PBQP exists for.
+TOL = 0.012
+
+
+def run(smoke: bool = False) -> List[str]:
+    if smoke:
+        tag, g = "vgg16_r8_smoke", vgg16(res=8, scale=0.05)
+        batches, reps, hw = (1, 2), 3, None
+    else:
+        tag, g = "googlenet_r56", googlenet(res=56, scale=0.25)
+        batches, reps = (1, 2, 4, 8), 13
+        hw = identify_parameters(g, max_dim=512)
+    params = init_params(g, jax.random.PRNGKey(0))
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+
+    # Calibrate + gate on a small sample batch, then reuse the gated plan
+    # (and its activation scales) for every bucket — exactly the artifact
+    # a serving deployment would commit.
+    calib = jax.random.normal(jax.random.PRNGKey(1), (2,) + shape)
+    report = plan_mixed_precision(g, params, calib, tol=TOL, hw=hw)
+    plan_bf16 = map_network(g, hw=hw)
+
+    mix = report.precision_mix
+    int8_errs = [report.errors[n] for n, p in report.plan.precisions.items()
+                 if p == "int8"]
+    rows = [
+        f"quantized,{tag},config,int8_layers,{mix.get('int8', 0)}",
+        f"quantized,{tag},config,bf16_layers,{mix.get('bf16', 0)}",
+        f"quantized,{tag},config,demoted_layers,{len(report.demoted)}",
+        f"quantized,{tag},config,gate_rounds,{report.rounds}",
+        f"quantized,{tag},config,gate_tol,{TOL}",
+        f"quantized,{tag},config,max_layer_err,"
+        f"{max(report.errors.values()):.4f}",
+        f"quantized,{tag},config,max_int8_layer_err,"
+        f"{max(int8_errs) if int8_errs else 0.0:.4f}",
+    ]
+
+    runs = {
+        "mixed": compile_plan(g, report.plan, act_scales=report.act_scales),
+        "bf16": compile_plan(g, plan_bf16),
+    }
+    ok = True
+    med = {name: {} for name in runs}
+    for batch in batches:
+        xb = jax.random.normal(jax.random.PRNGKey(2), (batch,) + shape)
+        out = {name: np.asarray(r(params, xb)) for name, r in runs.items()}
+        # Quantization error is real but gated: end-to-end outputs track
+        # the bf16 program within the same envelope the accuracy tests
+        # use for gated plans.
+        ok &= bool(np.allclose(out["mixed"], out["bf16"],
+                               rtol=0.1, atol=0.05))
+        samples = sampled_interleaved(
+            {name: (lambda r=r, x=xb: r(params, x))
+             for name, r in runs.items()}, reps=reps)
+        ms = {name: min(s) * 1e3 for name, s in samples.items()}
+        for name, s in samples.items():
+            med[name][batch] = float(np.median(s))
+        # Paired per-rep comparison: each rep measures both variants
+        # back-to-back, so the median of per-rep ratios cancels
+        # machine-phase drift a min-vs-min comparison is hostage to.
+        speedup = float(np.median(
+            [bf / mx for bf, mx in
+             zip(samples["bf16"], samples["mixed"])]))
+        pre = f"quantized,{tag},b{batch}"
+        rows.append(f"{pre},mixed_ms,{ms['mixed']:.2f}")
+        rows.append(f"{pre},bf16_ms,{ms['bf16']:.2f}")
+        rows.append(f"{pre},speedup_x,{speedup:.3f}")
+
+    # Same aggregate-within-envelope gate as bench_layout_elision: the
+    # summed ladder absorbs the >5% process-to-process jitter shared-CPU
+    # hosts show on identical programs; per-bucket rows stay raw.
+    mx_total = sum(med["mixed"].values())
+    bf_total = sum(med["bf16"].values())
+    no_slower = mx_total <= bf_total * 1.10
+    accuracy_ok = all(e <= TOL for e in int8_errs)
+
+    pre = f"quantized,{tag},summary"
+    rows.append(f"{pre},mixed_ladder_ms,{mx_total * 1e3:.2f}")
+    rows.append(f"{pre},bf16_ladder_ms,{bf_total * 1e3:.2f}")
+    rows.append(f"{pre},outputs_ok,{ok}")
+    rows.append(f"{pre},accuracy_ok,{accuracy_ok}")
+    rows.append(f"{pre},no_slower,{no_slower}")
+    if not smoke:
+        # GoogleNet acceptance: the joint solve picks int8 where it pays
+        # and keeps bf16 where Winograd wins — both must be present.
+        spread_ok = mix.get("int8", 0) >= 1 and mix.get("bf16", 0) >= 1
+        rows.append(f"{pre},precision_spread_ok,{spread_ok}")
+    return rows
+
+
+if __name__ == "__main__":
+    out = run(smoke="--smoke" in sys.argv)
+    print("\n".join(out))
+    # Correctness + the accuracy gate gate the smoke job; the no_slower
+    # perf summary is too noisy to assert on the tiny smoke graph and is
+    # only enforced for the committed full-run rows (CI schema guard).
+    if any(row.endswith(("outputs_ok,False", "accuracy_ok,False"))
+           for row in out):
+        sys.exit(1)

@@ -24,6 +24,7 @@ def main() -> None:
     import benchmarks.bench_layout_elision as bl
     import benchmarks.bench_multi_model as bm
     import benchmarks.bench_pipelined_serving as bp
+    import benchmarks.bench_quantized as bq
     import benchmarks.bench_roofline as br
     import benchmarks.bench_sharded_serving as bs
     import benchmarks.bench_utilization as bu
@@ -33,6 +34,7 @@ def main() -> None:
                       ("bench_dse", bd), ("bench_e2e", be),
                       ("bench_fused_autotune", bf),
                       ("bench_layout_elision", bl),
+                      ("bench_quantized", bq),
                       ("bench_dynamic_batching", bdb),
                       ("bench_sharded_serving", bs),
                       ("bench_pipelined_serving", bp),

@@ -31,6 +31,15 @@ submitted request accounted completed/rejected/shed/failed — not on
 every request completing, and the ``stats()["robustness"]`` block in
 the report shows the ledger.
 
+``--precision auto`` serves the gated mixed-precision plan: the
+precision-aware PBQP maps each layer int8-or-bf16 jointly with its
+algorithm, a calibration batch fixes per-tensor activation scales, and
+the accuracy gate demotes layers whose isolated int8 error exceeds the
+tolerance back to bf16 before compiling. ``--precision int8`` keeps the
+cost model's picks with the gate disarmed; the default ``bf16`` is the
+classic plan. The spot check compares against the eager walk of the
+*same* plan, so it stays tight at any precision.
+
 ``--models N`` (N >= 2) switches to multi-tenant serving: N copies of
 the architecture with independent params register in one
 ``MultiModelEngine`` — tenant 2..N recompile nothing (shared executable
@@ -165,6 +174,12 @@ def main() -> None:
                     help="arm the robustness stack: seeded fault "
                          "injection + bounded retries, deadline "
                          "shedding, degrade mode")
+    ap.add_argument("--precision", choices=("auto", "int8", "bf16"),
+                    default="bf16",
+                    help="auto: precision-aware PBQP + accuracy gate "
+                         "(plan_mixed_precision); int8: precision-aware "
+                         "PBQP with the gate disarmed; bf16: the classic "
+                         "all-bf16 plan (default)")
     ap.add_argument("--models", type=int, default=1,
                     help="N >= 2 serves N tenants of the architecture "
                          "(independent params) through one "
@@ -175,9 +190,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         args.res, args.scale, args.requests = 28, 0.1, 12
-    if args.models > 1 and (args.chaos or args.pipeline_depth != 1):
+    if args.models > 1 and (args.chaos or args.pipeline_depth != 1
+                            or args.precision != "bf16"):
         raise SystemExit("--models is incompatible with --chaos / "
-                         "--pipeline-depth (single-model knobs)")
+                         "--pipeline-depth / --precision "
+                         "(single-model knobs)")
 
     from repro.cnn.executor import forward, init_params
     from repro.cnn.models import googlenet
@@ -191,8 +208,30 @@ def main() -> None:
     print(f"googlenet res={args.res} scale={args.scale}: "
           f"{len(g.conv_nodes())} conv layers, serving on {n_dev} device(s)")
     hw = identify_parameters(g, max_dim=512)
-    plan = map_network(g, hw=hw)
     params = init_params(g, jax.random.PRNGKey(0))
+    act_scales = None
+    if args.precision == "bf16":
+        plan = map_network(g, hw=hw)
+    else:
+        # Quantized serving: solve the precision-aware PBQP on a small
+        # calibration batch. "auto" arms the accuracy gate (layers whose
+        # isolated int8 error exceeds tol demote to bf16); "int8" keeps
+        # whatever the cost model picked.
+        from repro.core.quant import calibrate_act_scales, \
+            plan_mixed_precision
+        shape0 = tuple(g.nodes[g.source()].attrs["out_shape"])
+        calib = jax.random.normal(jax.random.PRNGKey(7), (2,) + shape0)
+        if args.precision == "auto":
+            rep = plan_mixed_precision(g, params, calib, tol=0.012, hw=hw)
+            plan, act_scales = rep.plan, rep.act_scales
+            print(f"precision gate: {rep.precision_mix}, "
+                  f"demoted {rep.demoted} (tol {rep.tol})")
+        else:
+            plan = map_network(g, hw=hw, quantize=True)
+            act_scales = calibrate_act_scales(g, params, calib)
+            n8 = sum(1 for p in plan.precisions.values() if p == "int8")
+            print(f"precision forced int8: {n8}/{len(plan.precisions)} "
+                  f"layers int8 (gate disarmed)")
     record = None if args.smoke else \
         build_record(g, plan, args.record, buckets=(1, 2))
 
@@ -219,7 +258,7 @@ def main() -> None:
                            slo_s=args.slo_ms / 1e3, tuning=record,
                            mesh=mesh, warmup=True,
                            pipeline_depth=args.pipeline_depth,
-                           **robustness)
+                           act_scales=act_scales, **robustness)
     print(f"bucket ladder: {eng.buckets}"
           + (f" (per-chip {[b // eng.data_shards for b in eng.buckets]})"
              if mesh is not None else ""))
@@ -254,9 +293,11 @@ def main() -> None:
             else:            # all dispatched — retire in-flight ticks
                 eng.drain()
 
-    # Spot-check one output against the eager reference, then report.
+    # Spot-check one output against the eager reference (same plan, same
+    # activation scales — a quantized engine is checked against the
+    # quantized eager walk, so the tolerance stays tight), then report.
     want = np.asarray(forward(g, params, imgs[0], plan=plan,
-                              epilogue="bias_relu"))
+                              epilogue="bias_relu", act_scales=act_scales))
     err = float(np.max(np.abs(eng.done[0] - want)))
     print(f"request 0 vs eager reference: max|delta| = {err:.2e}")
     print(json.dumps(eng.stats(), indent=2, default=str))

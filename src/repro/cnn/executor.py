@@ -89,10 +89,12 @@ def _plan_fingerprint(plan: Optional[ExecutionPlan]):
     over (bindings + store formats — solver diagnostics excluded)."""
     if plan is None:
         return None
+    precisions = getattr(plan, "precisions", None) or {}
     return (plan.p1, plan.p2,
             tuple(sorted((n, a.key) for n, a in plan.assignment.items())),
             tuple(sorted((n, d.name) for n, d in plan.dataflows.items())),
-            tuple(sorted((n, f.value) for n, f in plan.store_formats.items())))
+            tuple(sorted((n, f.value) for n, f in plan.store_formats.items())),
+            tuple(sorted(precisions.items())))
 
 
 def _tuning_fingerprint(tuning) -> Optional[str]:
@@ -125,19 +127,27 @@ def executable_cache_key(graph: Graph, plan: Optional[ExecutionPlan] = None,
                          elide_overrides: Optional[Dict[Tuple[int, int],
                                                         bool]] = None,
                          mesh=None,
-                         donate: bool = False) -> tuple:
+                         donate: bool = False,
+                         act_scales: Optional[Dict[int, float]] = None
+                         ) -> tuple:
     """The ``(graph hash, plan, bucket, mesh, options)`` identity of one
     compiled executable: everything ``compile_plan`` closes over EXCEPT
     params (call arguments — weights never key the cache) and
     ``fault_hook`` (a host-side wrapper applied outside the cache, so a
-    fault-armed engine and a clean one still share the compiled body)."""
+    fault-armed engine and a clean one still share the compiled body).
+    The plan fingerprint carries per-layer precisions and ``act_scales``
+    the calibrated activation scales, so an int8 plan and the bf16 plan of
+    the same architecture can never collide on a key."""
     return (graph_hash(graph), _plan_fingerprint(plan), default_algo.key,
             bool(use_pallas), interpret, epilogue,
             _tuning_fingerprint(tuning), int(tuning_batch or 1),
             avg_pool_via, bool(elide),
             (None if elide_overrides is None
              else tuple(sorted(elide_overrides.items()))),
-            _mesh_fingerprint(mesh), bool(donate))
+            _mesh_fingerprint(mesh), bool(donate),
+            (None if act_scales is None
+             else tuple(sorted((int(n), float(s))
+                               for n, s in act_scales.items()))))
 
 
 class ExecutableCache:
@@ -236,7 +246,9 @@ def init_params(graph: Graph, key: jax.Array,
 def _eval_graph(graph: Graph, lowering: Lowering,
                 params: Params, x: jax.Array,
                 use_pallas: bool, interpret: Optional[bool],
-                avg_pool_via: str = "jnp") -> jax.Array:
+                avg_pool_via: str = "jnp",
+                conv_tap: Optional[Callable[[int, jax.Array], None]] = None
+                ) -> jax.Array:
     """Walk the graph once; with ``x`` a tracer this IS the trace that
     ``compile_plan`` stages out — all dict lookups and dispatch below happen
     at trace time only.
@@ -247,7 +259,11 @@ def _eval_graph(graph: Graph, lowering: Lowering,
     non-conv producers materialize it here), matched consumers read it
     directly (``in_layout``), and mismatched consumers restore to NHWC —
     the Table 2 converting load. A plain ``{nid: ConvLowering}`` dict (no
-    transitions) reproduces the layout-agnostic walk."""
+    transitions) reproduces the layout-agnostic walk.
+
+    ``conv_tap`` (calibration hook) is called with ``(nid, nhwc_input)``
+    for every conv node — ``core.quant.calibrate_act_scales`` uses it to
+    observe per-layer activation ranges on an eager f32 walk."""
     batched = x.ndim == 4
     store_specs: Dict[int, LayoutSpec] = getattr(lowering, "store_specs", {})
     values: Dict[int, _Staged] = {}
@@ -275,6 +291,8 @@ def _eval_graph(graph: Graph, lowering: Lowering,
                 epi = "relu" if epi.endswith("relu") else "none"
             in_layout = getattr(low, "in_layout", None)
             out_layout = getattr(low, "out_layout", None)
+            if conv_tap is not None:
+                conv_tap(nid, values[preds[0]].nhwc())
             xin = values[preds[0]].in_layout(in_layout)
             y = overlay.apply_conv(xin, params[nid]["w"], low.algo,
                                    low.dataflow, low.p1, low.p2,
@@ -285,7 +303,13 @@ def _eval_graph(graph: Graph, lowering: Lowering,
                                    interpret=interpret,
                                    epilogue=epi, bias=bias,
                                    in_layout=in_layout,
-                                   out_layout=out_layout)
+                                   out_layout=out_layout,
+                                   precision=getattr(low, "precision",
+                                                     "bf16"),
+                                   in_scale=getattr(low, "in_scale", None),
+                                   out_scale=getattr(low, "out_scale", None),
+                                   in_quantized=getattr(low, "in_quantized",
+                                                        False))
             if not epi.endswith("relu"):
                 # The graph semantics are CONV→ReLU; a relu-carrying
                 # epilogue already ran it inside the overlay call — ONE
@@ -341,16 +365,22 @@ def forward(graph: Graph, params: Params,
             tuning=None,
             tuning_batch: Optional[int] = None,
             elide: bool = True,
-            elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None
+            elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None,
+            act_scales: Optional[Dict[int, float]] = None,
+            conv_tap: Optional[Callable[[int, jax.Array], None]] = None
             ) -> jax.Array:
     """Eager inference. ``x``: (H, W, C) single image (the paper's no-batch
     low-latency setting) or (B, H, W, C) batch. Each call re-interprets the
-    plan in Python — use ``compile_plan`` for the dispatch-free hot path."""
+    plan in Python — use ``compile_plan`` for the dispatch-free hot path.
+    ``act_scales`` supplies calibrated activation scales for int8 layers;
+    ``conv_tap(nid, nhwc_input)`` observes every conv input (calibration)."""
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
                           batch=tuning_batch, elide=elide,
-                          elide_overrides=elide_overrides)
-    return _eval_graph(graph, lowering, params, x, use_pallas, interpret)
+                          elide_overrides=elide_overrides,
+                          act_scales=act_scales)
+    return _eval_graph(graph, lowering, params, x, use_pallas, interpret,
+                       conv_tap=conv_tap)
 
 
 def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
@@ -367,6 +397,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                  donate: bool = False,
                  fault_hook: Optional[Callable[[], None]] = None,
                  cache: Optional[ExecutableCache] = None,
+                 act_scales: Optional[Dict[int, float]] = None,
                  ) -> Callable[[Params, jax.Array], jax.Array]:
     """Lower (graph, plan) into one jit-compiled overlay program.
 
@@ -444,6 +475,12 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
     therefore share ONE compiled program per bucket; the fault hook is
     wrapped *around* the cached body, so fault-armed and clean engines
     share too. ``cache=None`` (default) compiles unconditionally.
+
+    ``act_scales`` ({conv node id: activation scale}, from
+    ``core.quant.calibrate_act_scales``) feeds the plan's int8 layers their
+    calibrated per-tensor input scales; it enters the cache key, so plans
+    differing only in calibration compile separately. A plan with no int8
+    layers ignores it.
     """
     if cache is not None:
         key = executable_cache_key(
@@ -451,13 +488,13 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
             interpret=interpret, epilogue=epilogue, tuning=tuning,
             tuning_batch=tuning_batch, avg_pool_via=avg_pool_via,
             elide=elide, elide_overrides=elide_overrides, mesh=mesh,
-            donate=donate)
+            donate=donate, act_scales=act_scales)
         base = cache.get_or_compile(key, lambda: _compile_plan_base(
             graph, plan, default_algo=default_algo, use_pallas=use_pallas,
             interpret=interpret, epilogue=epilogue, tuning=tuning,
             tuning_batch=tuning_batch, avg_pool_via=avg_pool_via,
             elide=elide, elide_overrides=elide_overrides, mesh=mesh,
-            donate=donate))
+            donate=donate, act_scales=act_scales))
         return _with_fault_hook(base, fault_hook)
     return _with_fault_hook(
         _compile_plan_base(graph, plan, default_algo=default_algo,
@@ -466,7 +503,7 @@ def compile_plan(graph: Graph, plan: Optional[ExecutionPlan] = None,
                            tuning_batch=tuning_batch,
                            avg_pool_via=avg_pool_via, elide=elide,
                            elide_overrides=elide_overrides, mesh=mesh,
-                           donate=donate),
+                           donate=donate, act_scales=act_scales),
         fault_hook)
 
 
@@ -476,7 +513,8 @@ def _compile_plan_base(graph: Graph, plan: Optional[ExecutionPlan], *,
                        tuning, tuning_batch: Optional[int],
                        avg_pool_via: str, elide: bool,
                        elide_overrides: Optional[Dict[Tuple[int, int], bool]],
-                       mesh, donate: bool
+                       mesh, donate: bool,
+                       act_scales: Optional[Dict[int, float]] = None
                        ) -> Callable[[Params, jax.Array], jax.Array]:
     """The hookless compile body ``compile_plan`` caches: lower, trace,
     jit, (optionally) shard — everything except the per-engine fault-hook
@@ -484,7 +522,8 @@ def _compile_plan_base(graph: Graph, plan: Optional[ExecutionPlan], *,
     lowering = lower_plan(graph, plan, default_algo,
                           epilogue=epilogue, tuning=tuning,
                           batch=tuning_batch, elide=elide,
-                          elide_overrides=elide_overrides)
+                          elide_overrides=elide_overrides,
+                          act_scales=act_scales)
     donate_argnums = (1,) if donate else ()
 
     def _run(params: Params, x: jax.Array) -> jax.Array:

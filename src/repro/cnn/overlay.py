@@ -38,7 +38,8 @@ import jax
 from repro.core.algorithms import Algorithm, AlgoFamily
 from repro.core.cost_model import Dataflow
 from repro.core.layouts import LayoutSpec, is_nhwc
-from repro.kernels.common import apply_epilogue
+from repro.kernels.common import (PRECISIONS, apply_epilogue, dequantize,
+                                  quantize, requantize, weight_scales)
 from repro.kernels.conv_im2col.ops import conv_im2col
 from repro.kernels.conv_im2col.ref import (conv_from_toeplitz_ref, conv_ref,
                                            conv_via_toeplitz_ref)
@@ -72,7 +73,11 @@ def apply_conv(x: jax.Array, w: jax.Array, algo: Algorithm,
                epilogue: str = "none",
                bias: Optional[jax.Array] = None,
                in_layout: Optional[LayoutSpec] = None,
-               out_layout: Optional[LayoutSpec] = None) -> jax.Array:
+               out_layout: Optional[LayoutSpec] = None,
+               precision: str = "bf16",
+               in_scale: Optional[float] = None,
+               out_scale: Optional[float] = None,
+               in_quantized: bool = False) -> jax.Array:
     """Run one conv layer on the overlay under a plan binding.
 
     x: the layer input in ``in_layout`` (default NHWC): (H, W, Cin) /
@@ -95,19 +100,66 @@ def apply_conv(x: jax.Array, w: jax.Array, algo: Algorithm,
     reference/lax paths apply it post-hoc (XLA fuses it there) so every
     backend computes the same function — CONV+ReLU is ONE overlay call
     either way.
+
+    ``precision`` ("bf16" | "int8") selects the quantized overlay path:
+    int8 layers quantize their weights per-output-channel in-trace and
+    their input per-tensor at the calibrated static ``in_scale`` (skipped
+    when ``in_quantized`` says the producer already emitted int8 at this
+    layer's scale — the fused precision edge), accumulate in int32, and
+    fuse dequant+bias+relu(+``out_scale`` requant) into the kernel flush.
+    Winograd layers reject int8 (the transforms amplify quantization
+    error; the mapper never assigns it). Non-Pallas backends emulate int8
+    with fake-quantized f32 operands — same quantization error, so the
+    accuracy gate can measure on any backend.
     """
     in_layout = None if is_nhwc(in_layout) else in_layout
     out_layout = None if is_nhwc(out_layout) else out_layout
+    if backend is not None and backend not in ("lax", "pallas", "reference"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; want {PRECISIONS}")
+    quant_kw = {}
+    post_requant = None
+    if precision == "int8":
+        if algo.family is AlgoFamily.WINOGRAD:
+            raise ValueError("Winograd is bf16-only: its input/output "
+                             "transforms amplify quantization error")
+        if in_scale is None:
+            raise ValueError("int8 precision needs a calibrated in_scale")
+        w_scale = weight_scales(w)
+        use_p = use_pallas if backend is None else backend == "pallas"
+        if use_p:
+            # True int8 kernels: quantized operands, int32 accumulation,
+            # dequant/requant fused into the epilogue flush. NHWC and
+            # Toeplitz inputs hold raw activations, so quantization
+            # commutes with the layout; anything else (e.g. a Winograd
+            # store format holding transformed tiles) restores first.
+            if not in_quantized:
+                if in_layout is not None and in_layout.kind != "toeplitz":
+                    x, in_layout = restore(x, in_layout), None
+                x = quantize(x, in_scale)
+            w = quantize(w, w_scale)
+            quant_kw = dict(scale=in_scale * w_scale, out_scale=out_scale)
+        else:
+            # Fake-quant emulation (lax / reference): dequantized f32
+            # operands carry the identical quantization error.
+            if in_quantized:
+                x = dequantize(x, in_scale)
+            else:
+                if in_layout is not None and in_layout.kind != "toeplitz":
+                    x, in_layout = restore(x, in_layout), None
+                x = dequantize(quantize(x, in_scale), in_scale)
+            w = dequantize(quantize(w, w_scale), w_scale)
+            post_requant = out_scale
+    if backend == "lax":
+        # XLA's conv wants spatial NHWC: converting load + store.
+        y = apply_epilogue(
+            conv_ref(restore(x, in_layout), w,
+                     stride=stride, padding=padding),
+            epilogue, bias)
+        y = materialize(y, out_layout)
+        return requantize(y, post_requant) if post_requant else y
     if backend is not None:
-        if backend == "lax":
-            # XLA's conv wants spatial NHWC: converting load + store.
-            y = apply_epilogue(
-                conv_ref(restore(x, in_layout), w,
-                         stride=stride, padding=padding),
-                epilogue, bias)
-            return materialize(y, out_layout)
-        if backend not in ("pallas", "reference"):
-            raise ValueError(f"unknown backend {backend!r}")
         use_pallas = backend == "pallas"
     fam = algo.family
     if fam is AlgoFamily.IM2COL:
@@ -116,28 +168,33 @@ def apply_conv(x: jax.Array, w: jax.Array, algo: Algorithm,
                                dataflow=dataflow, p1=p1, p2=p2,
                                interpret=interpret,
                                epilogue=epilogue, bias=bias,
-                               in_layout=in_layout, out_layout=out_layout)
+                               in_layout=in_layout, out_layout=out_layout,
+                               **quant_kw)
         if in_layout is not None and in_layout.kind == "toeplitz":
             y = apply_epilogue(
                 conv_from_toeplitz_ref(x, w, in_layout.o1, in_layout.o2),
                 epilogue, bias)
-            return materialize(y, out_layout)
+            y = materialize(y, out_layout)
+            return requantize(y, post_requant) if post_requant else y
         y = apply_epilogue(
             conv_via_toeplitz_ref(restore(x, in_layout), w,
                                   stride=stride, padding=padding),
             epilogue, bias)
-        return materialize(y, out_layout)
+        y = materialize(y, out_layout)
+        return requantize(y, post_requant) if post_requant else y
     if fam is AlgoFamily.KN2ROW:
         if use_pallas:
             return conv_kn2row(x, w, stride=stride, padding=padding,
                                dataflow=dataflow, p1=p1, p2=p2,
                                interpret=interpret,
                                epilogue=epilogue, bias=bias,
-                               in_layout=in_layout, out_layout=out_layout)
+                               in_layout=in_layout, out_layout=out_layout,
+                               **quant_kw)
         y = apply_epilogue(
             kn2row_ref(restore(x, in_layout), w,
                        stride=stride, padding=padding), epilogue, bias)
-        return materialize(y, out_layout)
+        y = materialize(y, out_layout)
+        return requantize(y, post_requant) if post_requant else y
     # Winograd — stride-1 square kernels only (menu_for guarantees this);
     # non-square/strided layers never receive a Winograd assignment.
     assert stride == 1 and w.shape[0] == w.shape[1]

@@ -64,20 +64,27 @@ def conv_key(conv: ConvMeta) -> str:
             f"_k{conv.k1}x{conv.k2}_s{conv.stride}_{conv.pad}")
 
 
-def record_key(conv: ConvMeta, batch: Optional[int] = None) -> str:
+def record_key(conv: ConvMeta, batch: Optional[int] = None,
+               precision: str = "bf16") -> str:
     """Full tuning-record key: conv signature plus the batch bucket the
     binding was measured at. ``batch=None`` (the single-image setting)
     records as bucket 1 — a batch-1 tick and a single image induce the
-    same per-image GEMMs."""
-    return f"{conv_key(conv)}@b{int(batch or 1)}"
+    same per-image GEMMs. Non-bf16 measurements append a ``#<precision>``
+    suffix ("sig@bN#int8"): bindings do not rank identically across
+    precisions (int8 moves half the bytes), so int8 layers only ever
+    adopt bindings measured at int8 — bf16 keys are unchanged, keeping
+    old records valid."""
+    key = f"{conv_key(conv)}@b{int(batch or 1)}"
+    return key if precision == "bf16" else f"{key}#{precision}"
 
 
-def parse_record_key(key: str) -> Tuple[str, int]:
-    """Inverse of ``record_key``: "sig@bN" → (sig, N)."""
-    sig, _, bucket = key.rpartition("@b")
+def parse_record_key(key: str) -> Tuple[str, int, str]:
+    """Inverse of ``record_key``: "sig@bN[#prec]" → (sig, N, prec)."""
+    base, _, prec = key.partition("#")
+    sig, _, bucket = base.rpartition("@b")
     if not sig or not bucket.isdigit():
         raise ValueError(f"unparseable record key {key!r}")
-    return sig, int(bucket)
+    return sig, int(bucket), prec or "bf16"
 
 
 def algo_from_key(key: str) -> Algorithm:
@@ -118,6 +125,8 @@ class LayerTuning:
     candidates: List[Tuple[str, float]]
     # Batch bucket the measurement ran at (1 = single image).
     batch: int = 1
+    # Precision the candidates were measured at ("bf16" | "int8").
+    precision: str = "bf16"
 
 
 class TuningRecord:
@@ -130,39 +139,43 @@ class TuningRecord:
         self.meta: Dict[str, object] = dict(meta or {})
 
     # ------------------------------------------------------------ lookup
-    def buckets_for(self, conv: ConvMeta) -> List[int]:
-        """Batch buckets this record has measured for ``conv``, ascending."""
+    def buckets_for(self, conv: ConvMeta,
+                    precision: str = "bf16") -> List[int]:
+        """Batch buckets this record has measured for ``conv`` at the
+        given precision, ascending."""
         sig = conv_key(conv)
         out = []
         for key in self.entries:
-            k_sig, bucket = parse_record_key(key)
-            if k_sig == sig:
+            k_sig, bucket, prec = parse_record_key(key)
+            if k_sig == sig and prec == precision:
                 out.append(bucket)
         return sorted(out)
 
-    def lookup(self, conv: ConvMeta,
-               batch: Optional[int] = None) -> Optional[LayerTuning]:
+    def lookup(self, conv: ConvMeta, batch: Optional[int] = None,
+               precision: str = "bf16") -> Optional[LayerTuning]:
         """The entry measured at ``batch`` (bucket-matched). Without an
         exact bucket match, fall back to the largest tuned bucket below the
         requested one (closest smaller workload), else the smallest above —
         so a batch-1-only record still serves every bucket, just without
-        per-bucket specialization."""
+        per-bucket specialization. Entries never cross precisions: an int8
+        layer with no int8 measurement runs its model-predicted binding."""
         want = int(batch or 1)
-        hit = self.entries.get(record_key(conv, want))
+        hit = self.entries.get(record_key(conv, want, precision))
         if hit is not None:
             return hit
-        buckets = self.buckets_for(conv)
+        buckets = self.buckets_for(conv, precision)
         if not buckets:
             return None
         below = [b for b in buckets if b < want]
         pick = below[-1] if below else buckets[0]
-        return self.entries[record_key(conv, pick)]
+        return self.entries[record_key(conv, pick, precision)]
 
-    def lowering_for(self, conv: ConvMeta,
-                     batch: Optional[int] = None) -> Optional[ConvLowering]:
-        """The measured binding as a ConvLowering fragment (epilogue is the
-        caller's concern — tuning only overrides the execution binding)."""
-        hit = self.lookup(conv, batch)
+    def lowering_for(self, conv: ConvMeta, batch: Optional[int] = None,
+                     precision: str = "bf16") -> Optional[ConvLowering]:
+        """The measured binding as a ConvLowering fragment (epilogue and
+        precision/scales are the caller's concern — tuning only overrides
+        the execution binding)."""
+        hit = self.lookup(conv, batch, precision)
         if hit is None:
             return None
         b = hit.binding
@@ -180,6 +193,7 @@ class TuningRecord:
                     "measured_s": t.measured_s,
                     "candidates": [[lbl, s] for lbl, s in t.candidates],
                     "batch": t.batch,
+                    "precision": t.precision,
                 }
                 for key, t in self.entries.items()
             },
@@ -200,13 +214,17 @@ class TuningRecord:
             if version == 1:
                 key = f"{key}@b{v1_bucket}"
                 bucket = v1_bucket
+                precision = "bf16"
             else:
                 bucket = int(ent.get("batch", parse_record_key(key)[1]))
+                precision = str(ent.get("precision",
+                                        parse_record_key(key)[2]))
             entries[key] = LayerTuning(
                 binding=Binding(**ent["binding"]),
                 measured_s=float(ent["measured_s"]),
                 candidates=[(lbl, float(s)) for lbl, s in ent["candidates"]],
                 batch=bucket,
+                precision=precision,
             )
         return cls(entries, meta)
 
@@ -282,6 +300,7 @@ def benchmark_binding(conv: ConvMeta, binding: Binding, *,
                       reps: int = 3, warmup: int = 1,
                       interpret: Optional[bool] = None,
                       batch: Optional[int] = None,
+                      precision: str = "bf16",
                       seed: int = 0) -> float:
     """Wall-clock one overlay call for ``conv`` under ``binding`` on the
     actual device; returns the best (min) of ``reps`` timed runs — min is
@@ -291,6 +310,8 @@ def benchmark_binding(conv: ConvMeta, binding: Binding, *,
     so reference and Pallas backends are timed on equal footing. ``batch``
     measures the batched overlay path (B, H, W, C) — bindings do not rank
     identically at batch 1 and batch 8, so tune at the batch you serve.
+    ``precision="int8"`` measures the quantized overlay path (a synthetic
+    unit activation scale — timing is scale-independent).
     """
     from repro.cnn import overlay       # deferred: overlay imports kernels
 
@@ -302,6 +323,8 @@ def benchmark_binding(conv: ConvMeta, binding: Binding, *,
     w = jax.random.normal(kw, (conv.k1, conv.k2, conv.c_in, conv.c_out),
                           jnp.float32) / (conv.k1 * conv.k2 * conv.c_in) ** .5
     pad = "SAME" if conv.pad == "same" else "VALID"
+    quant_kw = {} if precision == "bf16" else dict(
+        precision=precision, in_scale=3.0 / 127.0)
 
     @jax.jit
     def run(x, w):
@@ -309,7 +332,7 @@ def benchmark_binding(conv: ConvMeta, binding: Binding, *,
             x, w, binding.algo, Dataflow[binding.dataflow],
             binding.p1, binding.p2, stride=conv.stride, padding=pad,
             backend=binding.backend, interpret=interpret,
-            epilogue="relu")
+            epilogue="relu", **quant_kw)
 
     for _ in range(max(1, warmup)):
         jax.block_until_ready(run(x, w))    # compile + warm caches
@@ -328,6 +351,7 @@ def tune_layer(conv: ConvMeta, *,
                menu: Optional[Sequence[Algorithm]] = None,
                reps: int = 3, interpret: Optional[bool] = None,
                batch: Optional[int] = None,
+               precision: str = "bf16",
                baseline: Optional[Binding] = None,
                min_improvement: float = 0.05) -> LayerTuning:
     """Benchmark every candidate binding for one conv; return the winner.
@@ -336,20 +360,26 @@ def tune_layer(conv: ConvMeta, *,
     by more than ``min_improvement`` (fractional) or the baseline is kept:
     at μs layer scales dispatch jitter can crown a spurious winner, and the
     hysteresis guarantees a tuned plan never regresses below the
-    model-predicted binding by chasing noise.
+    model-predicted binding by chasing noise. ``precision="int8"`` measures
+    the quantized path; Winograd candidates are dropped (the overlay
+    rejects int8 Winograd).
     """
     results: List[Tuple[str, float]] = []
     base_s: Optional[float] = None
     if baseline is not None:
         base_s = benchmark_binding(conv, baseline, reps=reps,
-                                   interpret=interpret, batch=batch)
+                                   interpret=interpret, batch=batch,
+                                   precision=precision)
         results.append((baseline.label(), base_s))
     best: Optional[Tuple[Binding, float]] = None
     for cand in candidate_bindings(conv, p1p2, dataflows, backends, menu):
         if baseline is not None and cand == baseline:
             continue
+        if precision == "int8" \
+                and cand.algo.family is AlgoFamily.WINOGRAD:
+            continue
         s = benchmark_binding(conv, cand, reps=reps, interpret=interpret,
-                              batch=batch)
+                              batch=batch, precision=precision)
         results.append((cand.label(), s))
         if best is None or s < best[1]:
             best = (cand, s)
@@ -358,7 +388,8 @@ def tune_layer(conv: ConvMeta, *,
         assert baseline is not None and base_s is not None
         best = (baseline, base_s)
     return LayerTuning(binding=best[0], measured_s=best[1],
-                       candidates=results, batch=int(batch or 1))
+                       candidates=results, batch=int(batch or 1),
+                       precision=precision)
 
 
 def signature_coverage(graph: Graph, record: TuningRecord,
@@ -399,6 +430,7 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
                    menu: Optional[Sequence[Algorithm]] = None,
                    reps: int = 3, interpret: Optional[bool] = None,
                    batch: Optional[int] = None,
+                   precision: str = "bf16",
                    record: Optional[TuningRecord] = None,
                    skip_known: bool = True,
                    baseline_backend: str = "reference",
@@ -431,14 +463,16 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
 
     seen: Dict[str, Tuple[ConvMeta, Optional[Binding]]] = {}
     for node in graph.conv_nodes():
-        key = record_key(node.conv, bucket)
+        key = record_key(node.conv, bucket, precision)
         if key in seen:
             continue
         baseline = None
         if plan is not None and node.id in plan.assignment:
-            baseline = Binding(plan.assignment[node.id].key,
-                               plan.dataflows[node.id].name,
-                               plan.p1, plan.p2, baseline_backend)
+            algo = plan.assignment[node.id]
+            if not (precision == "int8"
+                    and algo.family is AlgoFamily.WINOGRAD):
+                baseline = Binding(algo.key, plan.dataflows[node.id].name,
+                                   plan.p1, plan.p2, baseline_backend)
         seen[key] = (node.conv, baseline)
 
     for key, (conv, baseline) in seen.items():
@@ -448,7 +482,7 @@ def autotune_graph(graph: Graph, plan: Optional[ExecutionPlan] = None, *,
         tuned = tune_layer(conv, p1p2=p1p2, dataflows=dataflows,
                            backends=backends, menu=menu, reps=reps,
                            interpret=interpret, batch=batch,
-                           baseline=baseline,
+                           precision=precision, baseline=baseline,
                            min_improvement=min_improvement)
         record.entries[key] = tuned
         if verbose:

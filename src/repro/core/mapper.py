@@ -28,9 +28,9 @@ if TYPE_CHECKING:  # pragma: no cover — autotune imports mapper at runtime
 from repro.core.algorithms import (Algorithm, AlgoFamily, DEFAULT_MENU,
                                    IM2COL, KN2ROW, Layout, menu_for)
 from repro.core.cost_model import (Dataflow, TPUSpec, TransitionCalibration,
-                                   V5E, best_dataflow, eff_bandwidth,
-                                   fits_on_chip, gemm_steps, node_cost,
-                                   transition_cost)
+                                   V5E, V5E_INT8, best_dataflow,
+                                   eff_bandwidth, fits_on_chip, gemm_steps,
+                                   node_cost, transition_cost)
 from repro.core.dse import HardwareChoice, identify_parameters
 from repro.core.graph import ConvMeta, Graph, LayerKind, LayerNode
 from repro.core.layouts import LayoutSpec, NHWC, consumer_spec
@@ -45,17 +45,23 @@ PASSTHROUGH = "passthrough"
 # obscurely at trace time inside a kernel.
 EPILOGUES = ("none", "relu", "bias", "bias_relu")
 BACKENDS = ("auto", "pallas", "reference", "lax")
+PRECISIONS = ("bf16", "int8")
 
 
 @dataclasses.dataclass
 class NodeChoices:
-    """The per-vertex choice set entering the PBQP."""
+    """The per-vertex choice set entering the PBQP. With quantization on,
+    conv vertices carry an (algorithm × precision) cross product: the int8
+    replicas of each non-Winograd algorithm appear as extra entries
+    (labels ``"<algo>@int8"``) priced under the int8 hardware spec, and
+    ``precisions[i]`` names entry i's precision (None ⇒ all bf16)."""
     node_id: int
     kind: LayerKind
     algos: List[Algorithm]          # empty for passthrough nodes
     labels: List[str]
     costs: np.ndarray               # (d,)
     dataflows: List[Optional[Dataflow]]
+    precisions: Optional[List[str]] = None
 
 
 @dataclasses.dataclass
@@ -68,6 +74,8 @@ class ExecutionPlan:
     total_cost_s: float
     solver: SolveResult
     choices: Dict[int, NodeChoices]
+    # conv node → "int8"|"bf16"; empty ⇒ all bf16 (pre-quantization plans).
+    precisions: Dict[int, str] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +90,13 @@ class ConvLowering:
     ``in_layout``/``out_layout`` (None = NHWC) realize the plan's DRAM
     store formats: the layer consumes its predecessor's stored format
     directly / emits its consumer's store format (§3.3, Table 2).
-    Hashable, so a (graph, lowering) pair keys one jit-compiled program."""
+    Hashable, so a (graph, lowering) pair keys one jit-compiled program.
+
+    Precision binding: ``precision`` "int8" runs the quantized overlay
+    path with the calibrated static per-tensor ``in_scale``; ``out_scale``
+    (set only on a fused int8→int8 chain edge) makes the layer requantize
+    its fused epilogue output to the consumer's scale and emit int8;
+    ``in_quantized`` marks the consumer side of that same edge."""
     algo: Algorithm
     dataflow: Dataflow
     p1: int
@@ -91,6 +105,10 @@ class ConvLowering:
     backend: str = "auto"
     in_layout: Optional[LayoutSpec] = None
     out_layout: Optional[LayoutSpec] = None
+    precision: str = "bf16"
+    in_scale: Optional[float] = None
+    out_scale: Optional[float] = None
+    in_quantized: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,12 +120,15 @@ class LayoutTransition:
     reads that format *directly* (the matched streaming load of Table 2 —
     no NHWC round trip); ``elide=False`` with a non-NHWC layout is the
     converting load (a mismatched sibling at a split); ``reason`` records
-    why an edge kept the round trip."""
+    why an edge kept the round trip. ``precision`` is the dtype crossing
+    the edge: "int8" only on a fused chain edge whose producer requantizes
+    into the consumer's activation scale (both endpoints int8, NHWC)."""
     src: int
     dst: int
     layout: LayoutSpec
     elide: bool
     reason: str = ""
+    precision: str = "bf16"
 
 
 @dataclasses.dataclass
@@ -160,6 +181,13 @@ class LoweredProgram:
         the transitions the compiled program skips."""
         return sorted((t.src, t.dst) for t in self.transitions.values()
                       if t.elide and t.layout.kind != "nhwc")
+
+    @property
+    def quantized_edges(self) -> List[Tuple[int, int]]:
+        """Fused precision edges: the producer requantizes into the
+        consumer's activation scale and the edge carries int8 bytes."""
+        return sorted((t.src, t.dst) for t in self.transitions.values()
+                      if t.precision == "int8")
 
 
 def _validate_lowering(graph: Graph, epilogue: str, backend: str,
@@ -290,6 +318,33 @@ def _thread_layouts(graph: Graph, plan: Optional[ExecutionPlan],
     return LoweredProgram(convs, transitions, store_specs)
 
 
+def _fuse_precision_edges(graph: Graph, prog: LoweredProgram
+                          ) -> LoweredProgram:
+    """Skip the f32 round trip on int8→int8 chain edges.
+
+    A single-consumer NHWC edge between two int8 layers carries int8: the
+    producer requantizes its fused epilogue output into the consumer's
+    activation scale (``out_scale``) and the consumer skips its own input
+    quantization (``in_quantized``) — the precision counterpart of layout
+    elision, reusing the same LayoutTransition bookkeeping. Fan-outs and
+    non-NHWC edges stay f32 (consumers quantize on load).
+    """
+    convs = dict(prog.convs)
+    transitions = dict(prog.transitions)
+    for (u, v), tr in prog.transitions.items():
+        lu, lv = convs.get(u), convs.get(v)
+        if (lu is None or lv is None
+                or lu.precision != "int8" or lv.precision != "int8"
+                or len(graph.successors(u)) != 1
+                or tr.layout.kind != "nhwc"
+                or lu.out_layout is not None or lv.in_layout is not None):
+            continue
+        convs[u] = dataclasses.replace(convs[u], out_scale=lv.in_scale)
+        convs[v] = dataclasses.replace(convs[v], in_quantized=True)
+        transitions[(u, v)] = dataclasses.replace(tr, precision="int8")
+    return LoweredProgram(convs, transitions, prog.store_specs)
+
+
 def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                default_algo: Algorithm = IM2COL, *,
                epilogue: str = "relu",
@@ -297,7 +352,8 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                tuning: Optional["TuningRecord"] = None,
                batch: Optional[int] = None,
                elide: bool = True,
-               elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None
+               elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None,
+               act_scales: Optional[Dict[int, float]] = None
                ) -> LoweredProgram:
     """Lower an ExecutionPlan to the static spec consumed at trace time.
 
@@ -322,8 +378,18 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
     (``{(src, dst): False}``), letting the autotuner measure elision
     per edge. Unknown epilogue/backend strings and malformed overrides are
     rejected here, not at trace time.
+
+    Precision: a plan whose ``precisions`` marks a layer "int8" lowers it
+    to the quantized overlay path; ``act_scales`` (conv node → calibrated
+    per-tensor activation scale, ``core.quant.calibrate_act_scales``) is
+    then required for every int8 layer. Int8→int8 single-consumer NHWC
+    edges fuse (the producer requantizes straight into the consumer's
+    scale and the edge carries int8); every other precision boundary is a
+    plain quantize/dequantize at the consumer/producer.
     """
     _validate_lowering(graph, epilogue, backend, elide_overrides)
+    precisions = (getattr(plan, "precisions", None) or {}) \
+        if plan is not None else {}
     base: Dict[int, ConvLowering] = {}
     for node in graph.conv_nodes():
         nid = node.id
@@ -335,8 +401,13 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                 plan.assignment.get(nid, default_algo),
                 plan.dataflows.get(nid, Dataflow.NS),
                 plan.p1, plan.p2, epilogue, backend)
+        prec = precisions.get(nid, "bf16")
+        if prec not in PRECISIONS:
+            raise ValueError(f"conv {nid}: unknown precision {prec!r}; "
+                             f"want one of {PRECISIONS}")
         if tuning is not None:
-            tuned = tuning.lowering_for(node.conv, batch=batch)
+            tuned = tuning.lowering_for(node.conv, batch=batch,
+                                        precision=prec)
             if tuned is not None:
                 if tuned.backend not in BACKENDS:
                     raise ValueError(
@@ -345,8 +416,22 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                 low = dataclasses.replace(
                     low, algo=tuned.algo, dataflow=tuned.dataflow,
                     p1=tuned.p1, p2=tuned.p2, backend=tuned.backend)
+        if prec == "int8":
+            if low.algo.family is AlgoFamily.WINOGRAD:
+                raise ValueError(f"conv {nid}: Winograd is bf16-only; an "
+                                 "int8 plan entry cannot lower to it")
+            if act_scales is None or nid not in act_scales:
+                raise ValueError(
+                    f"conv {nid} is planned int8 but has no calibrated "
+                    "activation scale; pass act_scales from "
+                    "core.quant.calibrate_act_scales")
+            low = dataclasses.replace(low, precision="int8",
+                                      in_scale=float(act_scales[nid]))
         base[nid] = low
-    return _thread_layouts(graph, plan, base, elide, elide_overrides or {})
+    prog = _thread_layouts(graph, plan, base, elide, elide_overrides or {})
+    if any(l.precision == "int8" for l in prog.convs.values()):
+        prog = _fuse_precision_edges(graph, prog)
+    return prog
 
 
 def _layer_out(node: LayerNode) -> Tuple[int, int, int]:
@@ -388,13 +473,25 @@ class CostGraphBuilder:
                  menu: Optional[Sequence[Algorithm]] = None,
                  spec: TPUSpec = V5E,
                  implicit_im2col: bool = False,
-                 use_on_chip: bool = True) -> None:
+                 use_on_chip: bool = True,
+                 quantize: bool = False,
+                 int8_spec: TPUSpec = V5E_INT8,
+                 force_bf16: Sequence[int] = ()) -> None:
         self.graph = graph
         self.hw = hw
         self.menu = list(menu) if menu is not None else list(DEFAULT_MENU)
         self.spec = spec
         self.implicit_im2col = implicit_im2col
         self.use_on_chip = use_on_chip
+        # Precision dimension: with ``quantize`` on, every non-Winograd
+        # algorithm entry gets an int8 replica priced under ``int8_spec``
+        # (the accuracy gate re-solves with demoted layers in
+        # ``force_bf16``, which suppresses their int8 entries entirely —
+        # so a demoted layer's choice vector is identical to the
+        # unquantized build and its assignment is bitwise-stable).
+        self.quantize = quantize
+        self.int8_spec = int8_spec
+        self.force_bf16 = frozenset(force_bf16)
         self.choices: Dict[int, NodeChoices] = {}
         self.split_formats: Dict[int, List[Algorithm]] = {}
         # Virtual store-format vertex id → the producer it splits, so the
@@ -406,17 +503,32 @@ class CostGraphBuilder:
     # ------------------------------------------------------------- choices
     def _conv_choices(self, node: LayerNode) -> NodeChoices:
         assert node.conv is not None
-        algos = menu_for(node.conv, self.menu)
-        costs, dfs, labels = [], [], []
-        for algo in algos:
+        menu = menu_for(node.conv, self.menu)
+        algos, costs, dfs, labels, precs = [], [], [], [], []
+        for algo in menu:
             df = self.hw.psi.get((node.id, algo.key))
             nc = node_cost(node.conv, algo, self.hw.p1, self.hw.p2, df,
                            self.spec)
+            algos.append(algo)
             costs.append(nc.total)
             dfs.append(nc.dataflow)
             labels.append(algo.key)
+            precs.append("bf16")
+        if self.quantize and node.id not in self.force_bf16:
+            for algo in menu:
+                if algo.family is AlgoFamily.WINOGRAD:
+                    continue  # transforms amplify quantization error
+                df = self.hw.psi.get((node.id, algo.key))
+                nc = node_cost(node.conv, algo, self.hw.p1, self.hw.p2, df,
+                               self.int8_spec)
+                algos.append(algo)
+                costs.append(nc.total)
+                dfs.append(nc.dataflow)
+                labels.append(f"{algo.key}@int8")
+                precs.append("int8")
         return NodeChoices(node.id, node.kind, algos, labels,
-                           np.asarray(costs), dfs)
+                           np.asarray(costs), dfs,
+                           precs if self.quantize else None)
 
     def _pass_choices(self, node: LayerNode) -> NodeChoices:
         return NodeChoices(node.id, node.kind, [], [PASSTHROUGH],
@@ -424,28 +536,48 @@ class CostGraphBuilder:
                            [None])
 
     # ---------------------------------------------------------- transitions
+    def _quant_pass_s(self, elems: int) -> float:
+        """One elementwise quantize pass on an edge tensor: read the bf16
+        activations, write int8 (the dequantize direction is free — the
+        int8 producer's accumulator flush emits f32 anyway)."""
+        return elems * (self.spec.dtype_bytes
+                        + self.int8_spec.dtype_bytes) / self.spec.hbm_bw
+
     def _edge_matrix(self, src: LayerNode, dst: LayerNode,
                      src_ch: NodeChoices, dst_ch: NodeChoices) -> np.ndarray:
-        """Table 2 store+load matrix between two executable vertices."""
+        """Table 2 store+load matrix between two executable vertices.
+
+        Precision boundaries price here: an int8→int8 chain edge moves
+        int8 bytes (the fused requantized transfer, ``int8_spec``); a
+        bf16→int8 boundary adds the consumer's quantize pass; int8→bf16
+        costs nothing extra (the flush emits f32)."""
         sh, sw, sc = _layer_out(src)
         m = np.zeros((len(src_ch.labels), len(dst_ch.labels)))
+        elems = sh * sw * sc
         on_chip = False
         if self.use_on_chip and dst.conv is not None:
-            on_chip = fits_on_chip(sh * sw * sc, dst.conv.in_elems, self.spec)
+            on_chip = fits_on_chip(elems, dst.conv.in_elems, self.spec)
         elif self.use_on_chip and dst.conv is None:
             dh, dw, dc = _layer_out(dst)
-            on_chip = fits_on_chip(sh * sw * sc, dh * dw * dc, self.spec)
+            on_chip = fits_on_chip(elems, dh * dw * dc, self.spec)
 
+        sp = _precisions_or_default(src_ch)
+        dp = _precisions_or_default(dst_ch)
         for i, s_algo in enumerate(_algos_or_default(src_ch)):
             for j, d_algo in enumerate(_algos_or_default(dst_ch)):
                 if dst.conv is not None:
+                    both_int8 = sp[i] == "int8" and dp[j] == "int8"
                     m[i, j] = transition_cost(
-                        s_algo, d_algo, dst.conv, sc, self.spec,
+                        s_algo, d_algo, dst.conv, sc,
+                        self.int8_spec if both_int8 else self.spec,
                         implicit_im2col=self.implicit_im2col,
                         on_chip=on_chip)
+                    if dp[j] == "int8" and sp[i] != "int8":
+                        m[i, j] += self._quant_pass_s(elems)
                 else:
-                    # Non-conv consumer: 3-D tensor round trip.
-                    bytes_ = sh * sw * sc * self.spec.dtype_bytes
+                    # Non-conv consumer: 3-D tensor round trip (an int8
+                    # producer emits f32 at the boundary — same bytes).
+                    bytes_ = elems * self.spec.dtype_bytes
                     m[i, j] = 0.0 if on_chip else 2 * bytes_ / self.spec.hbm_bw
         return m
 
@@ -470,6 +602,7 @@ class CostGraphBuilder:
                            dst: LayerNode, dst_ch: NodeChoices) -> np.ndarray:
         sh, sw, sc = _layer_out(src)
         m = np.zeros((len(formats), len(dst_ch.labels)))
+        dp = _precisions_or_default(dst_ch)
         for i, fmt in enumerate(formats):
             for j, d_algo in enumerate(_algos_or_default(dst_ch)):
                 if dst.conv is None:
@@ -489,6 +622,10 @@ class CostGraphBuilder:
                     m[i, j] = transition_cost(
                         fmt, d_algo, dst.conv, sc, self.spec,
                         implicit_im2col=self.implicit_im2col)
+                if dp[j] == "int8":
+                    # Fan-out stores stay f32; an int8 consumer pays its
+                    # own quantize pass on load.
+                    m[i, j] += self._quant_pass_s(sh * sw * sc)
         return m
 
     # ---------------------------------------------------------------- build
@@ -543,6 +680,13 @@ def _algos_or_default(ch: NodeChoices) -> List[Algorithm]:
     """Passthrough vertices behave as 3-D-tensor producers/consumers, which
     is exactly kn2row's layout (§3.3)."""
     return ch.algos if ch.algos else [KN2ROW]
+
+
+def _precisions_or_default(ch: NodeChoices) -> List[str]:
+    """Entry-wise precisions; vertices without the dimension are bf16."""
+    if ch.precisions:
+        return ch.precisions
+    return ["bf16"] * max(len(ch.labels), 1)
 
 
 def transition_report(graph: Graph, lowered: LoweredProgram,
@@ -601,15 +745,29 @@ def map_network(graph: Graph,
                 hw: Optional[HardwareChoice] = None,
                 implicit_im2col: bool = False,
                 use_on_chip: bool = True,
-                solver: str = "sp") -> ExecutionPlan:
+                solver: str = "sp",
+                quantize: bool = False,
+                int8_spec: TPUSpec = V5E_INT8,
+                force_bf16: Sequence[int] = ()) -> ExecutionPlan:
     """Run the full DYNAMAP flow on a CNN graph. ``solver`` ∈ {sp, brute,
     greedy_node, greedy_incremental} — non-sp solvers exist for the paper's
-    baseline comparisons and for optimality tests."""
+    baseline comparisons and for optimality tests.
+
+    ``quantize=True`` adds per-layer precision as a joint PBQP dimension:
+    each non-Winograd algorithm entry gets an int8 replica priced under
+    ``int8_spec`` (2× peak MACs, half the bytes on V5E) with precision-
+    boundary conversion costs on the edges, and the solved plan carries a
+    ``precisions`` map. ``force_bf16`` pins the listed conv nodes to bf16
+    (the accuracy gate's demotion mechanism): a pinned node's choice
+    vector is identical to the unquantized build, so demoted layers lower
+    bitwise-identically to the all-bf16 plan."""
     if hw is None:
         hw = identify_parameters(graph, menu=menu, spec=spec)
     builder = CostGraphBuilder(graph, hw, menu=menu, spec=spec,
                                implicit_im2col=implicit_im2col,
-                               use_on_chip=use_on_chip)
+                               use_on_chip=use_on_chip,
+                               quantize=quantize, int8_spec=int8_spec,
+                               force_bf16=force_bf16)
     pbqp, choices = builder.build()
 
     if solver == "sp":
@@ -627,12 +785,15 @@ def map_network(graph: Graph,
     assignment: Dict[int, Algorithm] = {}
     dataflows: Dict[int, Dataflow] = {}
     store_formats: Dict[int, Layout] = {}
+    precisions: Dict[int, str] = {}
     for nid, ch in choices.items():
         pick = res.assignment[nid]
         if ch.kind is LayerKind.CONV and ch.algos:
             assignment[nid] = ch.algos[pick]
             df = ch.dataflows[pick]
             dataflows[nid] = df if df is not None else Dataflow.NS
+            if quantize:
+                precisions[nid] = _precisions_or_default(ch)[pick]
         elif ch.labels and ch.labels[pick].startswith("store:"):
             # Keyed by the split *producer* (the graph node that stores),
             # not the virtual v_s id — this is what lower_plan consumes.
@@ -640,7 +801,8 @@ def map_network(graph: Graph,
                 ch.algos[pick].input_layout
     return ExecutionPlan(p1=hw.p1, p2=hw.p2, assignment=assignment,
                          dataflows=dataflows, store_formats=store_formats,
-                         total_cost_s=res.cost, solver=res, choices=choices)
+                         total_cost_s=res.cost, solver=res, choices=choices,
+                         precisions=precisions)
 
 
 def evaluate_fixed_mapping(graph: Graph, policy: str,

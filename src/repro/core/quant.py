@@ -1,0 +1,179 @@
+"""Calibration and the accuracy gate for the int8 overlay path.
+
+The mapper prices int8 algorithm replicas purely by throughput
+(``V5E_INT8``: 2x the MACs, half the bytes); whether a layer can *afford*
+int8 numerically is a property of its weights and activations, not its
+cost. This module closes that loop before a plan is finalized:
+
+* ``calibrate_act_scales`` — one eager f32 walk over sample inputs,
+  recording each conv layer's input abs-max through the executor's
+  ``conv_tap`` hook; the per-tensor activation scale is ``amax / 127``
+  (symmetric, zero-point 0 — matching ``kernels.common.quantize``).
+* ``layer_errors`` — per-layer quantization error measured in isolation:
+  each candidate layer runs once at f32 and once through the int8 path on
+  its OWN f32 reference input (errors never compound across layers), and
+  the relative max error ``max|int8 - f32| / max|f32|`` is reported.
+* ``plan_mixed_precision`` — the gate: solve the precision-aware PBQP,
+  demote every int8 layer whose isolated error exceeds ``tol`` via
+  ``map_network(force_bf16=...)``, and re-solve to a fixpoint (a demotion
+  changes boundary costs, which can flip a neighbor's precision). Demoted
+  layers' choice vectors are identical to the unquantized build, so they
+  lower bitwise-identically to the all-bf16 plan.
+
+Error isolation is what makes the gate cheap and monotone: a layer's
+error is independent of every other layer's precision, so it is measured
+once and the demotion loop converges without re-measuring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import TPUSpec, V5E, V5E_INT8
+from repro.core.graph import Graph
+from repro.core.mapper import ExecutionPlan, HardwareChoice, map_network
+from repro.kernels.common import INT8_MAX, _SCALE_EPS
+
+Params = Dict[int, Dict[str, jax.Array]]
+
+
+def _capture_conv_inputs(graph: Graph, params: Params, x: jax.Array
+                         ) -> Dict[int, jax.Array]:
+    """One eager f32 reference walk; returns each conv node's NHWC input
+    exactly as the executor would feed it (post-pool, post-concat)."""
+    from repro.cnn.executor import forward  # deferred: executor imports core
+
+    captured: Dict[int, jax.Array] = {}
+
+    def tap(nid: int, xin: jax.Array) -> None:
+        captured[nid] = xin
+
+    forward(graph, params, x, plan=None, conv_tap=tap)
+    return captured
+
+
+def calibrate_act_scales(graph: Graph, params: Params,
+                         samples: jax.Array) -> Dict[int, float]:
+    """Per-tensor activation scales from sample batches.
+
+    ``samples``: one image (H, W, C) or a calibration batch (N, H, W, C).
+    Runs the plain f32 reference walk (the scale of a layer's input does
+    not depend on the plan — every plan computes the same function) and
+    records each conv input's abs-max; the returned ``{nid: amax / 127}``
+    map feeds ``lower_plan(act_scales=...)`` / ``compile_plan`` and is a
+    static Python-float per layer, so it enters the executable cache key
+    rather than the traced program's inputs."""
+    captured = _capture_conv_inputs(graph, params, jnp.asarray(samples))
+    return {
+        nid: max(float(jnp.max(jnp.abs(xin))), _SCALE_EPS) / INT8_MAX
+        for nid, xin in captured.items()
+    }
+
+
+def layer_errors(graph: Graph, params: Params, x: jax.Array,
+                 act_scales: Dict[int, float],
+                 nodes: Optional[Sequence[int]] = None) -> Dict[int, float]:
+    """Isolated per-layer int8 output error vs the f32 reference.
+
+    For each conv in ``nodes`` (default: every conv with a calibrated
+    scale), the layer runs on its f32 reference input twice — plain f32
+    and through the overlay's int8 path (fake-quant emulation on the lax
+    backend: bit-identical quantization error to the Pallas kernels,
+    without interpret-mode cost) — and reports
+    ``mean|int8 - f32| / median|f32|``: mean error against the *typical*
+    (median) output magnitude. The robust denominator is deliberate — an
+    activation outlier blows up a max- or mean-based denominator exactly
+    as much as the error it causes, hiding the layer the gate most needs
+    to demote (per-tensor scaling sacrifices every ordinary activation to
+    represent the outlier). Epilogue-free on purpose: bias adds a
+    quantization-independent offset and ReLU only clips, so the raw conv
+    output is the conservative (largest-error) measurement point."""
+    from repro.cnn import overlay               # deferred
+    from repro.core.algorithms import IM2COL
+
+    captured = _capture_conv_inputs(graph, params, jnp.asarray(x))
+    want = list(nodes) if nodes is not None else sorted(
+        nid for nid in captured if nid in act_scales)
+    errors: Dict[int, float] = {}
+    for nid in want:
+        node = graph.nodes[nid]
+        m = node.conv
+        pad = "SAME" if m.pad == "same" else "VALID"
+        xin, w = captured[nid], params[nid]["w"]
+        ref = overlay.apply_conv(xin, w, IM2COL, stride=m.stride,
+                                 padding=pad, backend="lax")
+        got = overlay.apply_conv(xin, w, IM2COL, stride=m.stride,
+                                 padding=pad, backend="lax",
+                                 precision="int8",
+                                 in_scale=act_scales[nid])
+        errors[nid] = float(jnp.mean(jnp.abs(got - ref))
+                            / (jnp.median(jnp.abs(ref)) + _SCALE_EPS))
+    return errors
+
+
+@dataclasses.dataclass
+class QuantReport:
+    """Outcome of the mixed-precision gate: the finalized plan plus
+    everything needed to compile and audit it."""
+    plan: ExecutionPlan
+    act_scales: Dict[int, float]       # conv node -> per-tensor input scale
+    errors: Dict[int, float]           # isolated error of every measured node
+    demoted: List[int]                 # nodes the gate forced back to bf16
+    tol: float
+    rounds: int                        # PBQP solves until fixpoint
+
+    @property
+    def precision_mix(self) -> Dict[str, int]:
+        """{"int8": n, "bf16": m} over the plan's conv layers."""
+        mix = {"int8": 0, "bf16": 0}
+        for prec in self.plan.precisions.values():
+            mix[prec] = mix.get(prec, 0) + 1
+        return mix
+
+
+def plan_mixed_precision(graph: Graph, params: Params, samples: jax.Array,
+                         *, tol: float = 0.05,
+                         spec: TPUSpec = V5E,
+                         int8_spec: TPUSpec = V5E_INT8,
+                         hw: Optional[HardwareChoice] = None,
+                         menu=None, solver: str = "sp",
+                         implicit_im2col: bool = False,
+                         use_on_chip: bool = True,
+                         max_rounds: int = 8,
+                         verbose: bool = False) -> QuantReport:
+    """Solve a precision-aware plan and demote inaccurate layers to bf16.
+
+    Calibrates activation scales on ``samples``, measures every conv's
+    isolated int8 error once, then iterates: solve the joint PBQP
+    (``map_network(quantize=True, force_bf16=demoted)``), demote any int8
+    layer whose error exceeds ``tol``, re-solve. Converges in at most
+    ``max_rounds`` (each round strictly grows the demoted set, which is
+    bounded by the conv count). Returns the final plan + audit trail; feed
+    ``report.plan`` and ``report.act_scales`` to ``compile_plan``."""
+    samples = jnp.asarray(samples)
+    act_scales = calibrate_act_scales(graph, params, samples)
+    errors = layer_errors(graph, params, samples, act_scales)
+    demoted: set = set()
+    rounds = 0
+    while True:
+        rounds += 1
+        plan = map_network(graph, menu=menu, spec=spec, hw=hw,
+                           solver=solver, quantize=True,
+                           int8_spec=int8_spec,
+                           implicit_im2col=implicit_im2col,
+                           use_on_chip=use_on_chip,
+                           force_bf16=sorted(demoted))
+        offenders = sorted(
+            nid for nid, prec in plan.precisions.items()
+            if prec == "int8" and errors.get(nid, 0.0) > tol)
+        if verbose and offenders:
+            print(f"quant gate round {rounds}: demoting {offenders} "
+                  f"(err > {tol})")
+        if not offenders or rounds >= max_rounds:
+            break
+        demoted.update(offenders)
+    return QuantReport(plan=plan, act_scales=act_scales, errors=errors,
+                       demoted=sorted(demoted), tol=tol, rounds=rounds)

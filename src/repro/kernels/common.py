@@ -14,19 +14,72 @@ import jax.numpy as jnp
 # ReLU/bias without a DRAM round trip). "none" is the identity.
 EPILOGUES = ("none", "relu", "bias", "bias_relu")
 
+# Symmetric int8: zero-point 0, range [-127, 127] (−128 excluded so the
+# range is sign-symmetric and |q|·|q| accumulation bounds stay tight).
+INT8_MAX = 127
+_SCALE_EPS = 1e-12
+
+# Per-layer precisions the mapper can assign. Winograd is bf16-only (its
+# input/output transforms amplify quantization error), which the cost
+# graph encodes by never emitting an int8 label for Winograd algorithms.
+PRECISIONS = ("bf16", "int8")
+
 
 def apply_epilogue(y: jax.Array, epilogue: str,
-                   bias: jax.Array = None) -> jax.Array:
-    """Apply a named epilogue; ``bias`` broadcasts over the minor dim."""
+                   bias: jax.Array = None, *,
+                   scale: jax.Array = None,
+                   out_scale: float = None) -> jax.Array:
+    """Apply a named epilogue; ``bias`` broadcasts over the minor dim.
+
+    Quantized variants: ``scale`` (broadcasting over the minor dim, the
+    per-output-channel ``in_scale * w_scale`` product) dequantizes an
+    int32 accumulator to f32 *before* bias/relu; ``out_scale`` (a static
+    per-tensor float) requantizes the epilogue result back to int8
+    *after* bias/relu — so CONV+bias+ReLU+requant is one fused flush.
+    """
     if epilogue not in EPILOGUES:
         raise ValueError(f"unknown epilogue {epilogue!r}; want {EPILOGUES}")
+    if scale is not None:
+        y = y.astype(jnp.float32) * scale
     if epilogue.startswith("bias"):
         if bias is None:
             raise ValueError(f"epilogue {epilogue!r} needs a bias array")
         y = y + bias.astype(y.dtype)
     if epilogue.endswith("relu"):
         y = jnp.maximum(y, 0)
+    if out_scale is not None:
+        y = requantize(y, out_scale)
     return y
+
+
+def quantize(x: jax.Array, scale) -> jax.Array:
+    """f32 → symmetric int8 with the given scale (array or python float).
+
+    ``scale`` broadcasts, so a per-tensor scalar and a per-output-channel
+    vector both work; values round to nearest and saturate at ±INT8_MAX.
+    """
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale) -> jax.Array:
+    """int8 (or int32 accumulator) → f32: multiply by the scale."""
+    return q.astype(jnp.float32) * scale
+
+
+def requantize(y: jax.Array, out_scale: float) -> jax.Array:
+    """f32 epilogue output → int8 at the consumer's activation scale."""
+    q = jnp.round(y.astype(jnp.float32) / out_scale)
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def weight_scales(w: jax.Array) -> jax.Array:
+    """Per-output-channel symmetric scales for a weight tensor whose LAST
+    axis is the output channel (both (K1,K2,Cin,Cout) and (K,Cout) 2-D
+    GEMM operands qualify). Returns an f32 vector of shape (Cout,)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)),
+                   axis=tuple(range(w.ndim - 1)))
+    return jnp.maximum(amax, _SCALE_EPS) / INT8_MAX
 
 
 def pad_bias(bias, n: int, n_padded: int):

@@ -24,12 +24,18 @@ from repro.kernels.common import apply_epilogue
 
 
 def _conv_kernel(x_ref, w_ref, *rest, k1: int, k2: int, stride: int,
-                 bo1: int, o2: int, c_in: int, epilogue: str):
-    """One grid step = (one block of output rows) × (one block of C_out)."""
-    if len(rest) == 2:            # fused bias operand present
-        bias_ref, o_ref = rest
-    else:
-        (o_ref,), bias_ref = rest, None
+                 bo1: int, o2: int, c_in: int, epilogue: str,
+                 has_scale: bool = False, out_scale: float = None):
+    """One grid step = (one block of output rows) × (one block of C_out).
+
+    Operand order after (x, w): [scale?][bias?] o_ref. Int8 inputs
+    accumulate exactly in int32; the fused ``scale`` row dequantizes the
+    GEMM block before bias/relu and ``out_scale`` requantizes after.
+    """
+    rest = list(rest)
+    scale_ref = rest.pop(0) if has_scale else None
+    o_ref = rest[-1]
+    bias_ref = rest[0] if len(rest) == 2 else None
     i = pl.program_id(0)
     x = x_ref[...]                                   # (Hp, Wp, Cin) in VMEM
     row0 = i * bo1 * stride
@@ -43,38 +49,50 @@ def _conv_kernel(x_ref, w_ref, *rest, k1: int, k2: int, stride: int,
             patches.append(sl[::stride, ::stride, :])  # (bo1, o2, Cin)
     # The Toeplitz tile — VMEM-only (this is the whole point).
     toep = jnp.stack(patches, axis=2).reshape(bo1 * o2, k1 * k2 * c_in)
-    acc = jnp.dot(toep, w_ref[...], preferred_element_type=jnp.float32)
+    acc_dtype = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    acc = jnp.dot(toep, w_ref[...], preferred_element_type=acc_dtype)
     # Epilogue on the GEMM output block while it is still VMEM-resident —
-    # the §3 in-pipeline auxiliary unit.
+    # the §3 in-pipeline auxiliary unit (dequant/bias/relu/requant).
     acc = apply_epilogue(acc, epilogue,
-                         bias_ref[0] if bias_ref is not None else None)
+                         bias_ref[0] if bias_ref is not None else None,
+                         scale=scale_ref[0] if scale_ref is not None else None,
+                         out_scale=out_scale)
     o_ref[...] = acc.reshape(bo1, o2, -1).astype(o_ref.dtype)
 
 
 def conv_im2col_call(x: jax.Array, w: jax.Array, *, k1: int, k2: int,
                      stride: int, o1: int, o2: int, bo1: int, bc: int,
                      interpret: bool = True, epilogue: str = "none",
-                     bias: jax.Array = None) -> jax.Array:
+                     bias: jax.Array = None, scale: jax.Array = None,
+                     out_scale: float = None) -> jax.Array:
     hp, wp, c_in = x.shape
     kkc, c_out = w.shape
     assert kkc == k1 * k2 * c_in, (kkc, k1, k2, c_in)
     assert c_out % bc == 0 and o1 % bo1 == 0
+    quantized = x.dtype == jnp.int8
+    out_dtype = (jnp.int8 if out_scale is not None
+                 else jnp.float32 if quantized else x.dtype)
     grid = (o1 // bo1, c_out // bc)
     in_specs = [
         pl.BlockSpec((hp, wp, c_in), lambda i, j: (0, 0, 0)),
         pl.BlockSpec((kkc, bc), lambda i, j: (0, j)),
     ]
     operands = [x, w]
+    if scale is not None:
+        assert scale.shape == (1, c_out), (scale.shape, c_out)
+        in_specs.append(pl.BlockSpec((1, bc), lambda i, j: (0, j)))
+        operands.append(scale)
     if bias is not None:
         assert bias.shape == (1, c_out), (bias.shape, c_out)
         in_specs.append(pl.BlockSpec((1, bc), lambda i, j: (0, j)))
         operands.append(bias)
     return pl.pallas_call(
         functools.partial(_conv_kernel, k1=k1, k2=k2, stride=stride,
-                          bo1=bo1, o2=o2, c_in=c_in, epilogue=epilogue),
+                          bo1=bo1, o2=o2, c_in=c_in, epilogue=epilogue,
+                          has_scale=scale is not None, out_scale=out_scale),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bo1, o2, bc), lambda i, j: (i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((o1, o2, c_out), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((o1, o2, c_out), out_dtype),
         interpret=interpret,
     )(*operands)

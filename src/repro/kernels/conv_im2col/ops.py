@@ -27,7 +27,7 @@ from repro.kernels.layouts import materialize, restore
 @batchable
 @functools.partial(jax.jit, static_argnames=(
     "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue",
-    "in_layout", "out_layout"))
+    "in_layout", "out_layout", "out_scale"))
 def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: str = "SAME",
                 dataflow: Dataflow = Dataflow.NS,
@@ -35,7 +35,9 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
                 interpret: Optional[bool] = None,
                 epilogue: str = "none",
                 bias: Optional[jax.Array] = None,
-                in_layout=None, out_layout=None) -> jax.Array:
+                in_layout=None, out_layout=None,
+                scale: Optional[jax.Array] = None,
+                out_scale: Optional[float] = None) -> jax.Array:
     """Convolution via the im2col algorithm. x: (H, W, Cin) or (B, H, W, Cin),
     w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout). ``epilogue`` fuses the
     post-GEMM auxiliary unit (ReLU / bias) into the kernel's output flush.
@@ -44,12 +46,17 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
     plan's store formats: a "toeplitz" ``in_layout`` means ``x`` IS the
     layer's Toeplitz matrix — the window gather was paid once at the
     producer's store, so the layer is a plain dataflow-bound GEMM; a
-    non-NHWC ``out_layout`` emits the consumer's store format directly."""
+    non-NHWC ``out_layout`` emits the consumer's store format directly.
+
+    Int8 path: ``x``/``w`` already quantized (overlay does it), ``scale``
+    is the per-output-channel dequant vector and ``out_scale`` (static)
+    requantizes the fused epilogue's result to an int8 output."""
     interpret = default_interpret() if interpret is None else interpret
     if in_layout is not None and in_layout.kind == "toeplitz":
         out = toeplitz_gemm(x, w.reshape(-1, w.shape[-1]), in_layout,
                             dataflow, p1, p2, interpret=interpret,
-                            epilogue=epilogue, bias=bias)
+                            epilogue=epilogue, bias=bias, scale=scale,
+                            out_scale=out_scale)
         return materialize(out, out_layout)
     x = restore(x, in_layout)
     h, w_dim, c_in = x.shape
@@ -80,5 +87,7 @@ def conv_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
     out = conv_im2col_call(xp, wm, k1=k1, k2=k2, stride=stride,
                            o1=o1p, o2=o2, bo1=bo1, bc=bc,
                            interpret=interpret, epilogue=epilogue,
-                           bias=pad_bias(bias, c_out, c_outp))
+                           bias=pad_bias(bias, c_out, c_outp),
+                           scale=pad_bias(scale, c_out, c_outp),
+                           out_scale=out_scale)
     return materialize(out[:o1, :, :c_out], out_layout)

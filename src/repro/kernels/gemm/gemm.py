@@ -35,11 +35,20 @@ except Exception:  # pragma: no cover
     _VMEM = None
 
 
-def _gemm_kernel(a_ref, b_ref, *rest, nk: int, epilogue: str):
-    if len(rest) == 3:            # fused bias: (bias_ref, o_ref, acc_ref)
-        bias_ref, o_ref, acc_ref = rest
-    else:
-        (o_ref, acc_ref), bias_ref = rest, None
+def _gemm_kernel(a_ref, b_ref, *rest, nk: int, epilogue: str,
+                 has_scale: bool = False, out_scale: float = None):
+    """One kernel body for the bf16 and int8 paths.
+
+    Operand order after (a, b): [scale?][bias?] o_ref, acc_ref. The int8
+    path accumulates exactly in an int32 scratch (``preferred_element_type``
+    matches the scratch dtype), then the flush dequantizes with the fused
+    per-channel ``scale`` row, applies bias/relu, and optionally
+    requantizes at the static ``out_scale`` — one VMEM round trip total.
+    """
+    rest = list(rest)
+    scale_ref = rest.pop(0) if has_scale else None
+    o_ref, acc_ref = rest[-2], rest[-1]
+    bias_ref = rest[0] if len(rest) == 3 else None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -47,25 +56,35 @@ def _gemm_kernel(a_ref, b_ref, *rest, nk: int, epilogue: str):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == nk - 1)
     def _flush():
-        acc = apply_epilogue(acc_ref[...], epilogue,
-                             bias_ref[0] if bias_ref is not None else None)
+        acc = apply_epilogue(
+            acc_ref[...], epilogue,
+            bias_ref[0] if bias_ref is not None else None,
+            scale=scale_ref[0] if scale_ref is not None else None,
+            out_scale=out_scale)
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
                 interpret: bool = True, out_dtype=None,
                 epilogue: str = "none",
-                bias: jax.Array = None) -> jax.Array:
+                bias: jax.Array = None,
+                scale: jax.Array = None,
+                out_scale: float = None) -> jax.Array:
     """C = epilogue(A @ B [+ bias]) with explicit (bm, bn, bk) VMEM tiling.
 
     The epilogue is applied in-kernel at the accumulator flush — the output
     block streams through the auxiliary unit (§3) before ever leaving VMEM.
     Caller must pre-pad so M % bm == N % bn == K % bk == 0 (ops.py does);
     ``bias`` (if given) must be pre-padded to (1, N).
+
+    Int8 path: when A/B are int8 the scratch accumulator is int32 (exact),
+    ``scale`` (pre-padded (1, N), per-output-channel in_scale·w_scale)
+    dequantizes at the flush, and a non-None ``out_scale`` requantizes the
+    epilogue result to an int8 output.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -73,22 +92,31 @@ def gemm_pallas(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         (m, n, k, bm, bn, bk)
     nk = k // bk
-    out_dtype = out_dtype or a.dtype
+    quantized = a.dtype == jnp.int8
+    acc_dtype = jnp.int32 if quantized else jnp.float32
+    if out_dtype is None:
+        out_dtype = (jnp.int8 if out_scale is not None
+                     else jnp.float32 if quantized else a.dtype)
 
     grid = (m // bm, n // bn, nk)
-    scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
+    scratch = (pltpu.VMEM((bm, bn), acc_dtype) if _VMEM is not None
                else pl.ANY)  # pragma: no cover
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
     ]
     operands = [a, b]
+    if scale is not None:
+        assert scale.shape == (1, n), (scale.shape, n)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(scale)
     if bias is not None:
         assert bias.shape == (1, n), (bias.shape, n)
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         operands.append(bias)
     return pl.pallas_call(
-        functools.partial(_gemm_kernel, nk=nk, epilogue=epilogue),
+        functools.partial(_gemm_kernel, nk=nk, epilogue=epilogue,
+                          has_scale=scale is not None, out_scale=out_scale),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),

@@ -31,37 +31,50 @@ def dataflow_blocks(dataflow: Dataflow, p1: int, p2: int
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "dataflow", "p1", "p2", "interpret", "out_dtype", "epilogue"))
+    "dataflow", "p1", "p2", "interpret", "out_dtype", "epilogue",
+    "out_scale"))
 def gemm(a: jax.Array, b: jax.Array,
          dataflow: Dataflow = Dataflow.NS,
          p1: int = 128, p2: int = 128,
          interpret: Optional[bool] = None,
          out_dtype=None, epilogue: str = "none",
-         bias: Optional[jax.Array] = None) -> jax.Array:
+         bias: Optional[jax.Array] = None,
+         scale: Optional[jax.Array] = None,
+         out_scale: Optional[float] = None) -> jax.Array:
     """C = epilogue(A @ B [+ bias]) on the dataflow-switchable Computing
-    Unit; the epilogue is fused into the kernel's output flush."""
+    Unit; the epilogue is fused into the kernel's output flush.
+
+    Int8 operands accumulate in int32; ``scale`` ((N,) per-output-channel
+    dequant factors) and the static ``out_scale`` (requantize-to-int8)
+    ride the same fused flush as bias/relu."""
     interpret = default_interpret() if interpret is None else interpret
     m, k = a.shape
     _, n = b.shape
     bm, bn, bk = dataflow_blocks(dataflow, p1, p2)
-    bm, bn, bk = min(bm, ceil_to(m, 8)), min(bn, ceil_to(n, 128)), \
+    # int8 blocks need the (32, 128) minimum tile on real hardware.
+    row_tile = 32 if a.dtype == jnp.int8 else 8
+    bm, bn, bk = min(bm, ceil_to(m, row_tile)), min(bn, ceil_to(n, 128)), \
         min(bk, ceil_to(k, 128))
     ap = pad_to(a, (bm, bk))
     bp = pad_to(b, (bk, bn))
     out = gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret,
                       out_dtype=out_dtype, epilogue=epilogue,
-                      bias=pad_bias(bias, n, bp.shape[1]))
+                      bias=pad_bias(bias, n, bp.shape[1]),
+                      scale=pad_bias(scale, n, bp.shape[1]),
+                      out_scale=out_scale)
     return out[:m, :n]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "spec", "dataflow", "p1", "p2", "interpret", "epilogue"))
+    "spec", "dataflow", "p1", "p2", "interpret", "epilogue", "out_scale"))
 def toeplitz_gemm(t: jax.Array, w2d: jax.Array, spec,
                   dataflow: Dataflow = Dataflow.NS,
                   p1: int = 128, p2: int = 128,
                   interpret: Optional[bool] = None,
                   epilogue: str = "none",
-                  bias: Optional[jax.Array] = None) -> jax.Array:
+                  bias: Optional[jax.Array] = None,
+                  scale: Optional[jax.Array] = None,
+                  out_scale: Optional[float] = None) -> jax.Array:
     """Matched-layout conv leg: a consumer whose edge already carries its
     Toeplitz matrix (``core.layouts.LayoutSpec`` kind "toeplitz") feeds the
     dataflow-bound GEMM unit directly — Table 2's streaming Load(n, n), no
@@ -70,9 +83,11 @@ def toeplitz_gemm(t: jax.Array, w2d: jax.Array, spec,
     if t.ndim == 3:
         return jax.vmap(lambda ti: toeplitz_gemm(
             ti, w2d, spec, dataflow, p1, p2, interpret=interpret,
-            epilogue=epilogue, bias=bias))(t)
+            epilogue=epilogue, bias=bias, scale=scale,
+            out_scale=out_scale))(t)
     out = gemm(t, w2d, dataflow, p1, p2, interpret=interpret,
-               epilogue=epilogue, bias=bias)
+               epilogue=epilogue, bias=bias, scale=scale,
+               out_scale=out_scale)
     return out.reshape(spec.o1, spec.o2, w2d.shape[1])
 
 

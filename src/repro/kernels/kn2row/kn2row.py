@@ -41,6 +41,11 @@ def unit_conv_gemms(x2d: jax.Array, w: jax.Array, *, bm: int, bn: int,
     g, k2, n = w.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
     nk = k // bk
+    # Int8 phase 1 keeps exact int32 partial products; dequantization
+    # waits for the phase-2 flush (scale is constant across offsets).
+    quantized = x2d.dtype == jnp.int8
+    acc_dtype = jnp.int32 if quantized else jnp.float32
+    out_dtype = jnp.int32 if quantized else x2d.dtype
 
     def kernel(x_ref, w_ref, o_ref, acc_ref):
         kk = pl.program_id(3)
@@ -50,13 +55,13 @@ def unit_conv_gemms(x2d: jax.Array, w: jax.Array, *, bm: int, bn: int,
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
         acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
-                                preferred_element_type=jnp.float32)
+                                preferred_element_type=acc_dtype)
 
         @pl.when(kk == nk - 1)
         def _flush():
             o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
-    scratch = (pltpu.VMEM((bm, bn), jnp.float32) if _VMEM is not None
+    scratch = (pltpu.VMEM((bm, bn), acc_dtype) if _VMEM is not None
                else pl.ANY)  # pragma: no cover
     return pl.pallas_call(
         kernel,
@@ -68,7 +73,7 @@ def unit_conv_gemms(x2d: jax.Array, w: jax.Array, *, bm: int, bn: int,
             pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
-        out_shape=jax.ShapeDtypeStruct((g, m, n), x2d.dtype),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
         scratch_shapes=[scratch],
         interpret=interpret,
     )(x2d, w)
@@ -81,7 +86,8 @@ def unit_conv_gemms(x2d: jax.Array, w: jax.Array, *, bm: int, bn: int,
 def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
                    stride: int = 1, pad_top: int = 0, pad_left: int = 0,
                    interpret: bool = True, epilogue: str = "none",
-                   bias: jax.Array = None) -> jax.Array:
+                   bias: jax.Array = None, scale: jax.Array = None,
+                   out_scale: float = None) -> jax.Array:
     """p: (K1K2, H1p, H2p, Cout) — patches already zero-padded so that the
     (k1, k2) shift is a pure dynamic_slice; returns (O1, O2, Cout).
 
@@ -89,6 +95,11 @@ def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
     realized as slice(start=(k1, k2)) on the padded patch tensor. As the
     final kn2row stage, it owns the fused epilogue: the accumulated output
     streams through ReLU/bias at the flush, before ever leaving VMEM.
+
+    Int8 path: ``p`` holds exact int32 unit-conv partials; accumulation
+    stays int32 and the flush dequantizes with ``scale`` ((1, C) per-
+    output-channel), then bias/relu, then the optional ``out_scale``
+    requantize — the whole chain in one VMEM-resident pass.
     """
     g, h1p, h2p, c = p.shape
     assert g == k1 * k2
@@ -96,12 +107,17 @@ def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
     span_c = (o2 - 1) * stride + 1
     assert h1p >= span_r + k1 - 1 and h2p >= span_c + k2 - 1, \
         (p.shape, span_r, span_c)
+    quantized = p.dtype == jnp.int32
+    acc_dtype = jnp.int32 if quantized else jnp.float32
+    out_dtype = (jnp.int8 if out_scale is not None
+                 else jnp.float32 if quantized else p.dtype)
+    has_scale = scale is not None
 
     def kernel(p_ref, *rest):
-        if len(rest) == 3:
-            bias_ref, o_ref, acc_ref = rest
-        else:
-            (o_ref, acc_ref), bias_ref = rest, None
+        rest = list(rest)
+        scale_ref = rest.pop(0) if has_scale else None
+        o_ref, acc_ref = rest[-2], rest[-1]
+        bias_ref = rest[0] if len(rest) == 3 else None
         gg = pl.program_id(0)
 
         @pl.when(gg == 0)
@@ -112,18 +128,25 @@ def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
         dk2 = gg % k2
         patch = p_ref[0]                              # (H1p, H2p, C)
         sl = jax.lax.dynamic_slice(patch, (dk1, dk2, 0), (span_r, span_c, c))
-        acc_ref[...] += sl[::stride, ::stride, :].astype(jnp.float32)
+        acc_ref[...] += sl[::stride, ::stride, :].astype(acc_dtype)
 
         @pl.when(gg == g - 1)
         def _flush():
-            acc = apply_epilogue(acc_ref[...], epilogue,
-                                 bias_ref[0] if bias_ref is not None else None)
+            acc = apply_epilogue(
+                acc_ref[...], epilogue,
+                bias_ref[0] if bias_ref is not None else None,
+                scale=scale_ref[0] if scale_ref is not None else None,
+                out_scale=out_scale)
             o_ref[...] = acc.astype(o_ref.dtype)
 
-    scratch = (pltpu.VMEM((o1, o2, c), jnp.float32) if _VMEM is not None
+    scratch = (pltpu.VMEM((o1, o2, c), acc_dtype) if _VMEM is not None
                else pl.ANY)  # pragma: no cover
     in_specs = [pl.BlockSpec((1, h1p, h2p, c), lambda gg: (gg, 0, 0, 0))]
     operands = [p]
+    if scale is not None:
+        assert scale.shape == (1, c), (scale.shape, c)
+        in_specs.append(pl.BlockSpec((1, c), lambda gg: (0, 0)))
+        operands.append(scale)
     if bias is not None:
         assert bias.shape == (1, c), (bias.shape, c)
         in_specs.append(pl.BlockSpec((1, c), lambda gg: (0, 0)))
@@ -133,7 +156,7 @@ def pad_accumulate(p: jax.Array, *, k1: int, k2: int, o1: int, o2: int,
         grid=(g,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((o1, o2, c), lambda gg: (0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((o1, o2, c), p.dtype),
+        out_shape=jax.ShapeDtypeStruct((o1, o2, c), out_dtype),
         scratch_shapes=[scratch],
         interpret=interpret,
     )(*operands)

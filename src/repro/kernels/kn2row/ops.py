@@ -25,7 +25,7 @@ from repro.kernels.layouts import materialize, restore
 @batchable
 @functools.partial(jax.jit, static_argnames=(
     "stride", "padding", "dataflow", "p1", "p2", "interpret", "epilogue",
-    "in_layout", "out_layout"))
+    "in_layout", "out_layout", "out_scale"))
 def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: str = "SAME",
                 dataflow: Dataflow = Dataflow.NS,
@@ -33,7 +33,9 @@ def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
                 interpret: Optional[bool] = None,
                 epilogue: str = "none",
                 bias: Optional[jax.Array] = None,
-                in_layout=None, out_layout=None) -> jax.Array:
+                in_layout=None, out_layout=None,
+                scale: Optional[jax.Array] = None,
+                out_scale: Optional[float] = None) -> jax.Array:
     """Convolution via kn2row. x: (H, W, Cin) or (B, H, W, Cin),
     w: (K1, K2, Cin, Cout) → (…, O1, O2, Cout). ``epilogue`` fuses the
     post-GEMM auxiliary unit into the final pad-accumulate flush.
@@ -58,7 +60,8 @@ def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
     # Phase 1: (H*W, Cin) @ (K1K2, Cin, Cout) under the plan's block binding.
     bm, bn, bk = dataflow_blocks(dataflow, p1, p2)
     m = h * w_dim
-    bm_ = min(bm, ceil_to(m, 8))
+    # int8 blocks need the (32, 128) minimum tile on real hardware.
+    bm_ = min(bm, ceil_to(m, 32 if x.dtype == jnp.int8 else 8))
     bn_ = min(bn, ceil_to(c_out, 128))
     bk_ = min(bk, ceil_to(c_in, 128))
     mp, np_, kp = ceil_to(m, bm_), ceil_to(c_out, bn_), ceil_to(c_in, bk_)
@@ -74,5 +77,7 @@ def conv_kn2row(x: jax.Array, w: jax.Array, stride: int = 1,
     p = jnp.pad(p, ((0, 0), (pt, k1), (pl_, k2), (0, 0)))
     out = pad_accumulate(p, k1=k1, k2=k2, o1=o1, o2=o2, stride=stride,
                          interpret=interpret, epilogue=epilogue,
-                         bias=pad_bias(bias, c_out, np_))
+                         bias=pad_bias(bias, c_out, np_),
+                         scale=pad_bias(scale, c_out, np_),
+                         out_scale=out_scale)
     return materialize(out[:, :, :c_out], out_layout)

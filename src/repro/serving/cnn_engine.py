@@ -278,10 +278,18 @@ class CNNServingEngine:
                  max_retries: int = 2,
                  retry_backoff_s: float = 0.0,
                  degrade: Optional[DegradeConfig] = None,
-                 cache=None) -> None:
+                 cache=None,
+                 act_scales: Optional[Dict[int, float]] = None) -> None:
         self.graph = graph
         self.mesh = mesh
         self.cache = cache
+        # Per-layer precision map of the served plan (bf16 when the plan
+        # carries none) — surfaced by stats()["precision"]; act_scales
+        # feed every bucket executable's int8 layers and key the shared
+        # executable cache (see compile_plan).
+        self.act_scales = act_scales
+        self.precisions = dict(getattr(plan, "precisions", None) or {}) \
+            if plan is not None else {}
         if pipeline_depth < 1:
             raise ValueError(
                 f"pipeline_depth must be >= 1, got {pipeline_depth}")
@@ -350,7 +358,8 @@ class CNNServingEngine:
                                  tuning_batch=bucket // self.data_shards,
                                  mesh=mesh,
                                  donate=self.pipeline_depth > 1,
-                                 fault_hook=hook, cache=cache)
+                                 fault_hook=hook, cache=cache,
+                                 act_scales=act_scales)
             for bucket in self.buckets
         }
         # Rotating staging buffers sized for the largest bucket, allocated
@@ -1028,6 +1037,22 @@ class CNNServingEngine:
                 "mesh_devices": int(self.mesh.size),
                 "per_chip_batch": {b: b // self.data_shards
                                    for b in self.buckets},
+            },
+            # Per-layer precision mix of the served plan: conv layer
+            # counts per precision plus the int8 layer ids — the
+            # operator-facing audit of what the quantization gate kept.
+            "precision": {
+                "mix": {
+                    "int8": sum(1 for p in self.precisions.values()
+                                if p == "int8"),
+                    "bf16": (sum(1 for p in self.precisions.values()
+                                 if p != "int8")
+                             + sum(1 for n in self.graph.conv_nodes()
+                                   if n.id not in self.precisions)),
+                },
+                "int8_layers": sorted(
+                    n for n, p in self.precisions.items() if p == "int8"),
+                "calibrated": self.act_scales is not None,
             },
             # Overload/fault accounting. Every submitted request is
             # conserved across the four terminal outcomes plus the

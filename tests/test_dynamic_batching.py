@@ -246,7 +246,9 @@ def _tuning(backend, batch):
 def test_record_key_and_parse_roundtrip():
     assert record_key(CONV) == conv_key(CONV) + "@b1"
     assert record_key(CONV, 8) == conv_key(CONV) + "@b8"
-    assert parse_record_key(record_key(CONV, 4)) == (conv_key(CONV), 4)
+    assert parse_record_key(record_key(CONV, 4)) == (conv_key(CONV), 4, "bf16")
+    assert parse_record_key(record_key(CONV, 4, "int8")) \
+        == (conv_key(CONV), 4, "int8")
     with pytest.raises(ValueError, match="unparseable"):
         parse_record_key("garbage")
 
