@@ -26,7 +26,7 @@ clock — overlap only exists in real time):
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -83,7 +83,8 @@ def replay(
 
 
 def replay_robust(
-    eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]]
+    eng: CNNServingEngine, trace: List[Tuple[float, np.ndarray]],
+    on_tick: Optional[Callable[[float], None]] = None,
 ) -> Tuple[Dict[int, str], Dict[int, float], float]:
     """Shed-aware virtual-clock replay for robustness-armed engines
     (``pipeline_depth == 1``; lazy retirement under a virtual clock
@@ -98,7 +99,13 @@ def replay_robust(
     clock by its measured fault wall time). Returns ``(outcomes,
     done_at, makespan)`` with ``outcomes[rid]`` one of the four
     ``RequestOutcome`` strings for every rid in the trace — conservation
-    is the caller's gate, termination is this loop's."""
+    is the caller's gate, termination is this loop's.
+
+    ``on_tick(now)`` (if given) fires after every ``eng.step`` — between
+    ticks, the one place a plan supervisor may act (observe the tick,
+    re-solve, hot-swap) without a tick ever observing a half-deployed
+    ladder. The adaptive-serving benchmark drives ``PlanSupervisor.tick``
+    and its environment-shift schedule through this hook."""
     n = len(trace)
     outcomes: Dict[int, str] = {}
     done_at: Dict[int, float] = {}
@@ -111,6 +118,8 @@ def replay_robust(
                 outcomes[i] = OUTCOME_REJECTED
             i += 1
         served = eng.step(now=now)
+        if on_tick is not None:
+            on_tick(now)
         for rid in eng.shed_rids:
             outcomes.setdefault(rid, OUTCOME_SHED)
         for rid in eng.failed:

@@ -1,0 +1,265 @@
+"""Adaptive serving benchmark (PR 10): the closed re-mapping loop under
+a mid-trace service shift, gated on the swap actually paying off.
+
+Replays one Poisson arrival trace through two engines built on the same
+initial PBQP plan:
+
+* ``frozen`` — the plan never changes (today's one-shot offline DSE).
+* ``adaptive`` — a ``PlanSupervisor`` rides the replay's ``on_tick``
+  hook: it infers a transition-cost calibration from the engine's own
+  service EMAs, re-solves the PBQP, compiles the new ladder through the
+  shared ``ExecutableCache``, and hot-swaps it between ticks.
+
+The environment shift is an injected per-tick device delay
+(``device_delay_s`` rides the engine's completion path, so it lands in
+measured service, the EMAs, and the virtual clock): after ``SHIFT_TICK``
+dispatched ticks, transitions turn expensive — a plan still running the
+original transition-heavy assignment pays ``SHIFT_X`` times the floor
+delay, while a plan re-mapped away from those transitions pays
+``REMAP_X`` times. The delay floor itself (active from tick 0) dominates
+real kernel wall-time jitter, so every decision the loop makes — and
+every latency this benchmark reports — is delay-dominated and
+reproducible on a noisy host. The schedule is keyed on dispatched-tick
+count and deployed-plan fingerprint only, so frozen/adaptive/reference
+runs all experience the identical environment timeline.
+
+Hard gates (``sys.exit`` on violation, smoke included — every quantity
+is injected-delay-dominated, so there is no shared-host-noise exemption):
+
+* ``plan_flipped`` — the supervisor swapped exactly once, no rollback,
+  and the deployed plan's fingerprint actually changed.
+* ``pre_swap_bitwise_ok`` — every request the adaptive engine completed
+  before the swap is bitwise identical to the frozen (no-swap) run.
+* ``post_swap_bitwise_ok`` — every request completed after the swap is
+  bitwise identical to a reference replay deployed on the adopted plan
+  from tick 0: the swap boundary changes *which* plan computes, never
+  what a plan computes.
+* ``conservation`` — the outcome ledger balances for every engine.
+* ``p99_speedup_ok`` — in the tail of the post-shift window the frozen
+  engine's completed-p99 is at least ``ADAPTIVE_GATE`` (1.10x) the
+  adaptive engine's: the re-map must buy real latency, not just differ.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+REPO = Path(__file__).resolve().parents[1]
+for _p in (str(REPO), str(REPO / "src")):     # direct `python benchmarks/…`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+from benchmarks._trace import replay_robust
+from repro.cnn.executor import ExecutableCache, init_params
+from repro.cnn.models import googlenet, vgg16
+from repro.core.dse import identify_parameters
+from repro.core.mapper import map_network, plan_fingerprint
+from repro.serving.cnn_engine import OUTCOME_COMPLETED, CNNServingEngine
+from repro.serving.supervisor import PlanSupervisor
+
+PREFIX = "adaptive_serving"
+# Frozen post-shift tail p99 must beat adaptive by at least this factor.
+ADAPTIVE_GATE = 1.10
+# Delay schedule, in units of the floor delay d0: before the shift every
+# plan pays 1x; after it the original (transition-heavy) plan pays
+# SHIFT_X and a re-mapped plan REMAP_X. The implied EMA inflation the
+# supervisor sees, (w + SHIFT_X*d0)/(w + d0) ~= 4.4, prices transitions
+# past the ~4x regime where the PBQP winner provably flips.
+SHIFT_X, REMAP_X = 6.0, 2.0
+
+
+def _poisson_trace(shape, seed: int, rate: float, n: int):
+    rng = np.random.default_rng(seed)
+    t, times = 0.0, []
+    for gap in rng.exponential(1.0 / rate, size=n):
+        t += gap
+        times.append(t)
+    imgs = rng.standard_normal((n,) + shape).astype(np.float32)
+    return [(times[i], imgs[i]) for i in range(n)]
+
+
+def _p99(done_at: Dict[int, float], trace, rids) -> float:
+    lats = [done_at[r] - trace[r][0] for r in rids if r in done_at]
+    return float(np.percentile(lats, 99)) if lats else float("nan")
+
+
+class _Environment:
+    """The injected delay schedule, identical for every engine: keyed on
+    the engine's own dispatched-tick count and deployed-plan fingerprint
+    — never wall time — so separate replays see the same timeline."""
+
+    def __init__(self, d0: float, shift_tick: int, fp_initial):
+        self.d0 = d0
+        self.shift_tick = shift_tick
+        self.fp_initial = fp_initial
+
+    def apply(self, eng: CNNServingEngine) -> None:
+        if eng._dispatched_ticks < self.shift_tick:
+            eng.device_delay_s = self.d0
+        elif plan_fingerprint(eng.plan) == self.fp_initial:
+            eng.device_delay_s = SHIFT_X * self.d0
+        else:
+            eng.device_delay_s = REMAP_X * self.d0
+
+
+def _measure(smoke: bool) -> List[str]:
+    if smoke:
+        tag, g = "vgg16_r8_smoke", vgg16(res=8, scale=0.05)
+        hw = identify_parameters(g)
+        batch = 4
+        n_pre, n_post = 32, 72
+    else:
+        tag, g = "googlenet_r56", googlenet(res=56, scale=0.25)
+        hw = identify_parameters(g, max_dim=512)
+        batch = 8
+        n_pre, n_post = 64, 144
+    params = init_params(g, jax.random.PRNGKey(0))
+    shape = tuple(g.nodes[g.source()].attrs["out_shape"])
+    plan_a = map_network(g, hw=hw, use_on_chip=False)
+    fp_a = plan_fingerprint(plan_a)
+    cache = ExecutableCache()
+
+    def _mk(plan):
+        return CNNServingEngine(g, params, plan, batch_size=batch,
+                                cache=cache, warmup=True)
+
+    # Probe the raw device service so the delay floor provably dominates
+    # kernel jitter (>= 4ms or 2x the measured top-bucket wall).
+    probe = _mk(plan_a)
+    svc_top = probe.service_estimate(batch)
+    d0 = max(0.004, 2.0 * svc_top)
+    shift_tick = (n_pre + batch - 1) // batch
+    env = _Environment(d0, shift_tick, fp_a)
+
+    # Arrival rate: stable for the re-mapped service (w + REMAP_X*d0)
+    # but unsustainable for the frozen engine's post-shift service
+    # (w + SHIFT_X*d0) — the frozen queue must grow, the adaptive one
+    # must not, and the p99 gap is the price of not re-mapping.
+    rate = 0.7 * batch / (svc_top + REMAP_X * d0)
+    n = n_pre + n_post
+    trace = _poisson_trace(shape, seed=42, rate=rate, n=n)
+
+    rows = [
+        f"{PREFIX},{tag},config,-,n_requests,{n}",
+        f"{PREFIX},{tag},config,-,batch,{batch}",
+        f"{PREFIX},{tag},config,-,svc_ms_top,{svc_top * 1e3:.2f}",
+        f"{PREFIX},{tag},config,-,delay_floor_ms,{d0 * 1e3:.2f}",
+        f"{PREFIX},{tag},config,-,shift_tick,{shift_tick}",
+        f"{PREFIX},{tag},config,-,rate_rps,{rate:.2f}",
+    ]
+
+    # ---- frozen replay (no supervisor; plan never changes) ------------
+    frozen = _mk(plan_a)
+    froz_outcomes, froz_done_at, _ = replay_robust(
+        frozen, trace, on_tick=lambda now: env.apply(frozen))
+    assert all(v == OUTCOME_COMPLETED for v in froz_outcomes.values())
+    froz_conserved = frozen.submitted_total == n and \
+        len(frozen.done) == n
+
+    # ---- adaptive replay (supervisor on the on_tick hook) -------------
+    adaptive = _mk(plan_a)
+    adaptive.device_delay_s = d0
+    swap_info: Dict[str, object] = {}
+    # settle_checks=2: a construction-warmed engine seeds its per-bucket
+    # EMAs at raw device walls (no injected delay), and with alpha=0.5 a
+    # lightly-trafficked bucket needs more than one check window to
+    # converge under the delay floor — one extra settle window keeps that
+    # engine-attributable convergence out of the sticky scale, so the
+    # only fold left is the injected shift itself.
+    sup = PlanSupervisor(adaptive, g,
+                         map_kwargs=dict(hw=hw, use_on_chip=False),
+                         check_every=4, rollback_ticks=3, settle_checks=2,
+                         on_swap=lambda result:
+                             swap_info.update(plan=result.plan))
+
+    def _adaptive_tick(now: float) -> None:
+        pre_swaps = sup.swaps
+        sup.tick()
+        if sup.swaps != pre_swaps:              # rids completed pre-swap
+            swap_info["pre_rids"] = set(adaptive.done)
+            swap_info["at"] = now
+        env.apply(adaptive)
+
+    adpt_outcomes, adpt_done_at, _ = replay_robust(
+        adaptive, trace, on_tick=_adaptive_tick)
+    assert all(v == OUTCOME_COMPLETED for v in adpt_outcomes.values())
+    adpt_conserved = adaptive.submitted_total == n and \
+        len(adaptive.done) == n
+
+    flipped = (sup.swaps == 1 and sup.rollbacks == 0
+               and plan_fingerprint(adaptive.plan) != fp_a)
+    rows += [
+        f"{PREFIX},{tag},loop,-,swaps,{sup.swaps}",
+        f"{PREFIX},{tag},loop,-,rollbacks,{sup.rollbacks}",
+        f"{PREFIX},{tag},loop,-,checks,{sup.checks}",
+        f"{PREFIX},{tag},loop,-,inferred_scale,{sup._inferred_scale:.3f}",
+        f"{PREFIX},{tag},loop,-,swap_at_s,"
+        f"{float(swap_info.get('at', float('nan'))):.3f}",
+    ]
+
+    # ---- bitwise gates across the swap boundary -----------------------
+    pre_rids = swap_info.get("pre_rids", set())
+    pre_bitwise = flipped and bool(pre_rids) and all(
+        np.array_equal(np.asarray(adaptive.done[r]),
+                       np.asarray(frozen.done[r]))
+        for r in pre_rids)
+    post_bitwise = False
+    if flipped:
+        reference = _mk(swap_info["plan"])      # adopted plan from tick 0
+        ref_outcomes, _, _ = replay_robust(
+            reference, trace, on_tick=lambda now: env.apply(reference))
+        assert all(v == OUTCOME_COMPLETED for v in ref_outcomes.values())
+        post_rids = set(adaptive.done) - pre_rids
+        post_bitwise = bool(post_rids) and all(
+            np.array_equal(np.asarray(adaptive.done[r]),
+                           np.asarray(reference.done[r]))
+            for r in post_rids)
+        rows.append(f"{PREFIX},{tag},swap_window,-,pre_swap_completions,"
+                    f"{len(pre_rids)}")
+        rows.append(f"{PREFIX},{tag},swap_window,-,post_swap_completions,"
+                    f"{len(post_rids)}")
+
+    # ---- post-shift tail p99 ------------------------------------------
+    tail = range(n_pre + n_post // 2, n)
+    froz_p99 = _p99(froz_done_at, trace, tail)
+    adpt_p99 = _p99(adpt_done_at, trace, tail)
+    ratio = froz_p99 / adpt_p99 if adpt_p99 > 0 else float("nan")
+    speedup_ok = bool(np.isfinite(ratio) and ratio >= ADAPTIVE_GATE)
+    rows += [
+        f"{PREFIX},{tag},post_shift,-,frozen_tail_p99_ms,"
+        f"{froz_p99 * 1e3:.2f}",
+        f"{PREFIX},{tag},post_shift,-,adaptive_tail_p99_ms,"
+        f"{adpt_p99 * 1e3:.2f}",
+        f"{PREFIX},{tag},post_shift,-,p99_ratio,{ratio:.2f}",
+        f"{PREFIX},{tag},cache,-,entries,{cache.stats()['entries']}",
+        f"{PREFIX},{tag},summary,-,plan_flipped,{flipped}",
+        f"{PREFIX},{tag},summary,-,pre_swap_bitwise_ok,{pre_bitwise}",
+        f"{PREFIX},{tag},summary,-,post_swap_bitwise_ok,{post_bitwise}",
+        f"{PREFIX},{tag},summary,-,conservation,"
+        f"{froz_conserved and adpt_conserved}",
+        f"{PREFIX},{tag},summary,-,p99_speedup_ok,{speedup_ok}",
+    ]
+    return rows
+
+
+def run(smoke: bool = False) -> List[str]:
+    return _measure(smoke)
+
+
+if __name__ == "__main__":
+    out = run(smoke="--smoke" in sys.argv)
+    print("\n".join(out))
+    # Every gate is hard on every invocation, --smoke included: all the
+    # gated quantities are injected-delay-dominated, so there is no
+    # shared-host-noise exemption to grant.
+    hard = ("plan_flipped", "pre_swap_bitwise_ok", "post_swap_bitwise_ok",
+            "conservation", "p99_speedup_ok")
+    for row in out:
+        f = row.split(",")
+        if f[2] == "summary" and f[4] in hard and f[5] != "True":
+            sys.exit(f"adaptive gate failed: {row}")

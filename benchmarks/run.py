@@ -15,6 +15,7 @@ REPO = Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
+    import benchmarks.bench_adaptive_serving as bas
     import benchmarks.bench_algorithms as ba
     import benchmarks.bench_chaos_serving as bc
     import benchmarks.bench_dse as bd
@@ -40,6 +41,7 @@ def main() -> None:
                       ("bench_pipelined_serving", bp),
                       ("bench_chaos_serving", bc),
                       ("bench_multi_model", bm),
+                      ("bench_adaptive_serving", bas),
                       ("bench_roofline", br)):
         t0 = time.time()
         try:

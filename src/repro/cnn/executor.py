@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import threading
 import warnings
 from typing import Callable, Dict, Optional, Tuple, Union
 
@@ -44,7 +45,7 @@ from repro.core.algorithms import Algorithm, IM2COL
 from repro.core.graph import Graph, LayerKind
 from repro.core.layouts import LayoutSpec, is_nhwc
 from repro.core.mapper import (ConvLowering, ExecutionPlan, LoweredProgram,
-                               lower_plan)
+                               lower_plan, plan_fingerprint)
 from repro.kernels.layouts import materialize, restore
 
 Params = Dict[int, Dict[str, jax.Array]]
@@ -84,17 +85,11 @@ def graph_hash(graph: Graph) -> str:
     return h.hexdigest()[:16]
 
 
-def _plan_fingerprint(plan: Optional[ExecutionPlan]):
-    """Content fingerprint of the parts of a plan a compiled program closes
-    over (bindings + store formats — solver diagnostics excluded)."""
-    if plan is None:
-        return None
-    precisions = getattr(plan, "precisions", None) or {}
-    return (plan.p1, plan.p2,
-            tuple(sorted((n, a.key) for n, a in plan.assignment.items())),
-            tuple(sorted((n, d.name) for n, d in plan.dataflows.items())),
-            tuple(sorted((n, f.value) for n, f in plan.store_formats.items())),
-            tuple(sorted(precisions.items())))
+# The plan's content fingerprint moved next to ExecutionPlan itself
+# (core.mapper.plan_fingerprint) so the hot-swap supervisor can compare
+# plans without importing the executor; the private alias survives for
+# existing call sites.
+_plan_fingerprint = plan_fingerprint
 
 
 def _tuning_fingerprint(tuning) -> Optional[str]:
@@ -157,23 +152,31 @@ class ExecutableCache:
     builds-and-stores it; hit/miss counters feed ``stats()`` and the
     ``bench_multi_model`` cross-model-reuse gate. Entries are never evicted
     — one entry per (architecture, plan, bucket, mesh, options) is exactly
-    the working set a serving process needs resident."""
+    the working set a serving process needs resident.
+
+    Thread-safe: the hot-swap supervisor compiles replacement bucket
+    ladders on a background thread against the same cache the serving
+    thread reads, so lookup-and-store runs under a lock (held across the
+    build too — two threads racing on one key must not compile twice and
+    publish different callables for it)."""
 
     def __init__(self) -> None:
         self._store: Dict[tuple, Callable] = {}
         self.hits = 0
         self.misses = 0
+        self._lock = threading.RLock()
 
     def get_or_compile(self, key: tuple,
                        builder: Callable[[], Callable]) -> Callable:
-        run = self._store.get(key)
-        if run is not None:
-            self.hits += 1
+        with self._lock:
+            run = self._store.get(key)
+            if run is not None:
+                self.hits += 1
+                return run
+            self.misses += 1
+            run = builder()
+            self._store[key] = run
             return run
-        self.misses += 1
-        run = builder()
-        self._store[key] = run
-        return run
 
     def __len__(self) -> int:
         return len(self._store)

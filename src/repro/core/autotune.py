@@ -259,6 +259,67 @@ class TuningRecord:
         return adopted
 
 
+def refresh_from_service(record: "TuningRecord", graph: Graph,
+                         service_emas: Dict[int, float], *,
+                         precisions: Optional[Dict[int, str]] = None,
+                         min_improvement: float = 0.05
+                         ) -> Dict[int, float]:
+    """Live-refresh a record's measured costs from serving-tier EMAs.
+
+    The serving engine keeps one service-time EMA per batch bucket (the
+    measured wall time of a tick); the record predicts the same tick as
+    the sum of its per-layer measured winners. When the live EMA diverges
+    from that prediction by more than ``min_improvement`` (the autotuner's
+    5% hysteresis — sub-hysteresis noise never churns the record), every
+    ``(signature, bucket)`` entry measured at that exact bucket is
+    rescaled by the live/recorded ratio — ``measured_s`` and the stored
+    candidate times alike — so consumers of recorded costs (re-tune
+    baselines, operator dashboards, the hot-swap supervisor's decision
+    inputs) see them in live terms. Bindings are untouched: a uniform
+    per-bucket scale cannot re-rank candidates measured together; flipping
+    a winner requires a real re-measurement (``tune_layer``).
+
+    ``precisions`` (conv node id → "bf16"|"int8") mirrors the deployed
+    plan so the prediction sums the entries the engine actually lowers
+    with. Returns the applied scale per bucket (empty = nothing diverged
+    or nothing measured); applied scales accumulate in
+    ``record.meta["live_refresh"]`` with the tick counts they came from.
+    """
+    precisions = precisions or {}
+    applied: Dict[int, float] = {}
+    for bucket, ema in sorted(service_emas.items()):
+        if ema is None or ema <= 0.0:
+            continue
+        expected = 0.0
+        exact_keys = []
+        for node in graph.conv_nodes():
+            prec = precisions.get(node.id, "bf16")
+            hit = record.lookup(node.conv, batch=bucket, precision=prec)
+            if hit is None:
+                continue
+            expected += hit.measured_s
+            key = record_key(node.conv, bucket, prec)
+            if key in record.entries:
+                exact_keys.append(key)
+        if expected <= 0.0 or not exact_keys:
+            continue
+        ratio = float(ema) / expected
+        if abs(ratio - 1.0) <= min_improvement:
+            continue                      # within hysteresis: hold steady
+        for key in set(exact_keys):
+            ent = record.entries[key]
+            ent.measured_s *= ratio
+            ent.candidates = [(lbl, s * ratio) for lbl, s in ent.candidates]
+        applied[bucket] = ratio
+    if applied:
+        log = dict(record.meta.get("live_refresh", {}))
+        for bucket, ratio in applied.items():
+            log[str(bucket)] = round(
+                float(log.get(str(bucket), 1.0)) * ratio, 6)
+        record.meta["live_refresh"] = log
+    return applied
+
+
 # ---------------------------------------------------------------------------
 # Candidate generation.
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ Both formulations price exactly the same store/load legs of Table 2.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -143,11 +144,17 @@ class LoweredProgram:
     producers fuse it via ``ConvLowering.out_layout``). Behaves as a
     mapping over ``convs`` so pre-layout call sites (``lowering[nid]``,
     ``.values()``) keep working.
+
+    ``calibration`` is the transition-cost calibration the program was
+    lowered under (None = the uncalibrated analytical model); consumers
+    that re-price the program's transitions (``transition_report``) read
+    it from here instead of taking a duplicate side-channel argument.
     """
     convs: Dict[int, ConvLowering]
     transitions: Dict[Tuple[int, int], LayoutTransition] = \
         dataclasses.field(default_factory=dict)
     store_specs: Dict[int, LayoutSpec] = dataclasses.field(default_factory=dict)
+    calibration: Optional[TransitionCalibration] = None
 
     # -------------------------------------------------- mapping protocol
     def __getitem__(self, nid: int) -> ConvLowering:
@@ -353,7 +360,8 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
                batch: Optional[int] = None,
                elide: bool = True,
                elide_overrides: Optional[Dict[Tuple[int, int], bool]] = None,
-               act_scales: Optional[Dict[int, float]] = None
+               act_scales: Optional[Dict[int, float]] = None,
+               calibration: Optional[TransitionCalibration] = None
                ) -> LoweredProgram:
     """Lower an ExecutionPlan to the static spec consumed at trace time.
 
@@ -386,6 +394,11 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
     edges fuse (the producer requantizes straight into the consumer's
     scale and the edge carries int8); every other precision boundary is a
     plain quantize/dequantize at the consumer/producer.
+
+    ``calibration`` rides along on the returned program (it does not
+    change the lowering itself): downstream re-pricing —
+    ``transition_report`` — reads it from ``LoweredProgram.calibration``,
+    the single calibration channel shared with ``map_network``.
     """
     _validate_lowering(graph, epilogue, backend, elide_overrides)
     precisions = (getattr(plan, "precisions", None) or {}) \
@@ -431,6 +444,7 @@ def lower_plan(graph: Graph, plan: Optional[ExecutionPlan],
     prog = _thread_layouts(graph, plan, base, elide, elide_overrides or {})
     if any(l.precision == "int8" for l in prog.convs.values()):
         prog = _fuse_precision_edges(graph, prog)
+    prog.calibration = calibration
     return prog
 
 
@@ -476,13 +490,19 @@ class CostGraphBuilder:
                  use_on_chip: bool = True,
                  quantize: bool = False,
                  int8_spec: TPUSpec = V5E_INT8,
-                 force_bf16: Sequence[int] = ()) -> None:
+                 force_bf16: Sequence[int] = (),
+                 calibration: Optional[TransitionCalibration] = None) -> None:
         self.graph = graph
         self.hw = hw
         self.menu = list(menu) if menu is not None else list(DEFAULT_MENU)
         self.spec = spec
         self.implicit_im2col = implicit_im2col
         self.use_on_chip = use_on_chip
+        # Measured-vs-predicted transition scales: every edge matrix the
+        # builder prices goes through ``transition_cost(calibration=...)``,
+        # so a re-solve sees the machine's realized transition costs (the
+        # closed-loop re-pricing path — see ``map_network``/``replan``).
+        self.calibration = calibration
         # Precision dimension: with ``quantize`` on, every non-Winograd
         # algorithm entry gets an int8 replica priced under ``int8_spec``
         # (the accuracy gate re-solves with demoted layers in
@@ -571,7 +591,8 @@ class CostGraphBuilder:
                         s_algo, d_algo, dst.conv, sc,
                         self.int8_spec if both_int8 else self.spec,
                         implicit_im2col=self.implicit_im2col,
-                        on_chip=on_chip)
+                        on_chip=on_chip,
+                        calibration=self.calibration)
                     if dp[j] == "int8" and sp[i] != "int8":
                         m[i, j] += self._quant_pass_s(elems)
                 else:
@@ -579,6 +600,9 @@ class CostGraphBuilder:
                     # producer emits f32 at the boundary — same bytes).
                     bytes_ = elems * self.spec.dtype_bytes
                     m[i, j] = 0.0 if on_chip else 2 * bytes_ / self.spec.hbm_bw
+                    if not on_chip and self.calibration is not None:
+                        m[i, j] *= self.calibration.scale(
+                            s_algo.output_layout, Layout.TENSOR3D)
         return m
 
     def _split_store_matrix(self, src: LayerNode, src_ch: NodeChoices,
@@ -591,7 +615,8 @@ class CostGraphBuilder:
                 if rep_consumer is not None:
                     m[i, j] = 0.5 * transition_cost(
                         s_algo, fmt, rep_consumer, sc, self.spec,
-                        implicit_im2col=self.implicit_im2col)
+                        implicit_im2col=self.implicit_im2col,
+                        calibration=self.calibration)
                 else:
                     m[i, j] = sh * sw * sc * self.spec.dtype_bytes \
                         / self.spec.hbm_bw
@@ -615,13 +640,15 @@ class CostGraphBuilder:
                     # Matched format → streaming load (paper's Load(n, n)).
                     m[i, j] = 0.5 * transition_cost(
                         fmt, d_algo, dst.conv, sc, self.spec,
-                        implicit_im2col=self.implicit_im2col)
+                        implicit_im2col=self.implicit_im2col,
+                        calibration=self.calibration)
                 else:
                     # Converting load: pay the dst-layout bytes at the
                     # (possibly lane-penalized) effective bandwidth.
                     m[i, j] = transition_cost(
                         fmt, d_algo, dst.conv, sc, self.spec,
-                        implicit_im2col=self.implicit_im2col)
+                        implicit_im2col=self.implicit_im2col,
+                        calibration=self.calibration)
                 if dp[j] == "int8":
                     # Fan-out stores stay f32; an int8 consumer pays its
                     # own quantize pass on load.
@@ -689,10 +716,12 @@ def _precisions_or_default(ch: NodeChoices) -> List[str]:
     return ["bf16"] * max(len(ch.labels), 1)
 
 
+_CAL_UNSET = object()   # sentinel: distinguishes "not passed" from None
+
+
 def transition_report(graph: Graph, lowered: LoweredProgram,
                       spec: TPUSpec = V5E,
-                      calibration: Optional[TransitionCalibration] = None
-                      ) -> Dict[str, object]:
+                      calibration=_CAL_UNSET) -> Dict[str, object]:
     """Predicted Table 2 cost of the lowered program's elided transitions
     vs the always-NHWC-round-trip baseline — what the layout bench compares
     against realized wall clock.
@@ -702,9 +731,21 @@ def transition_report(graph: Graph, lowered: LoweredProgram,
     streaming load (½·T(dst, dst)); the round-trip baseline pays the 3-D
     tensor store (½·T(src, 3D)) plus the converting load into the
     consumer's layout (full T, the ``_split_load_matrix`` convention).
-    ``calibration`` (``cost_model.TransitionCalibration``) rescales each
-    layout pair by its measured/predicted ratio.
+
+    Calibration comes from ``lowered.calibration`` (set by
+    ``lower_plan(calibration=...)``) — the single channel shared with
+    ``map_network``. Passing ``calibration=`` here directly is deprecated;
+    it still wins over the program's own calibration so existing callers
+    price identically, but new code should thread it through
+    ``lower_plan``.
     """
+    if calibration is _CAL_UNSET:
+        calibration = lowered.calibration
+    elif calibration is not None:
+        warnings.warn(
+            "transition_report(calibration=...) is deprecated; pass "
+            "calibration to lower_plan(...) and let the LoweredProgram "
+            "carry it", DeprecationWarning, stacklevel=2)
     edges = []
     roundtrip_total = elided_total = 0.0
     for (u, v), tr in sorted(lowered.transitions.items()):
@@ -748,7 +789,9 @@ def map_network(graph: Graph,
                 solver: str = "sp",
                 quantize: bool = False,
                 int8_spec: TPUSpec = V5E_INT8,
-                force_bf16: Sequence[int] = ()) -> ExecutionPlan:
+                force_bf16: Sequence[int] = (),
+                calibration: Optional[TransitionCalibration] = None
+                ) -> ExecutionPlan:
     """Run the full DYNAMAP flow on a CNN graph. ``solver`` ∈ {sp, brute,
     greedy_node, greedy_incremental} — non-sp solvers exist for the paper's
     baseline comparisons and for optimality tests.
@@ -760,14 +803,23 @@ def map_network(graph: Graph,
     ``precisions`` map. ``force_bf16`` pins the listed conv nodes to bf16
     (the accuracy gate's demotion mechanism): a pinned node's choice
     vector is identical to the unquantized build, so demoted layers lower
-    bitwise-identically to the all-bf16 plan."""
+    bitwise-identically to the all-bf16 plan.
+
+    ``calibration`` (``cost_model.TransitionCalibration``) re-prices every
+    edge matrix by the measured/predicted scale of its (source layout,
+    destination layout) pair, so a re-solve optimizes against the machine's
+    realized transition costs instead of the analytical model — the
+    closed-loop half of the DSE (see ``replan`` and
+    ``serving.supervisor.PlanSupervisor``). Mapping is deterministic: the
+    same graph + spec + calibration always yields the identical plan."""
     if hw is None:
         hw = identify_parameters(graph, menu=menu, spec=spec)
     builder = CostGraphBuilder(graph, hw, menu=menu, spec=spec,
                                implicit_im2col=implicit_im2col,
                                use_on_chip=use_on_chip,
                                quantize=quantize, int8_spec=int8_spec,
-                               force_bf16=force_bf16)
+                               force_bf16=force_bf16,
+                               calibration=calibration)
     pbqp, choices = builder.build()
 
     if solver == "sp":
@@ -803,6 +855,81 @@ def map_network(graph: Graph,
                          dataflows=dataflows, store_formats=store_formats,
                          total_cost_s=res.cost, solver=res, choices=choices,
                          precisions=precisions)
+
+
+def plan_fingerprint(plan: Optional[ExecutionPlan]):
+    """Content fingerprint of the parts of a plan a compiled program closes
+    over (bindings + store formats + precisions — solver diagnostics
+    excluded). Two plans with equal fingerprints lower and compile
+    identically; the executable cache and the hot-swap supervisor both key
+    off this."""
+    if plan is None:
+        return None
+    precisions = getattr(plan, "precisions", None) or {}
+    return (plan.p1, plan.p2,
+            tuple(sorted((n, a.key) for n, a in plan.assignment.items())),
+            tuple(sorted((n, d.name) for n, d in plan.dataflows.items())),
+            tuple(sorted((n, f.value) for n, f in plan.store_formats.items())),
+            tuple(sorted(precisions.items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanResult:
+    """Outcome of one calibrated re-solve against a deployed plan.
+
+    ``plan`` is what should be serving after this decision: the candidate
+    when adopted, the deployed plan otherwise. ``changed`` records whether
+    the candidate's fingerprint differs at all; ``adopted`` additionally
+    requires the candidate to beat the deployed plan's *re-priced* cost by
+    more than the hysteresis margin — re-priced meaning the deployed
+    assignment evaluated under the SAME calibrated cost graph the
+    candidate was solved on, so the comparison is apples to apples."""
+    plan: ExecutionPlan
+    candidate: ExecutionPlan
+    adopted: bool
+    changed: bool
+    deployed_cost_s: float
+    candidate_cost_s: float
+
+
+def replan(graph: Graph, deployed: ExecutionPlan, *,
+           calibration: Optional[TransitionCalibration] = None,
+           hysteresis: float = 0.05,
+           **map_kwargs) -> ReplanResult:
+    """Calibrated PBQP re-solve with a hysteresis adoption gate.
+
+    Re-solves the mapping under ``calibration`` and prices the *deployed*
+    assignment on the same calibrated cost graph; the candidate is adopted
+    only when it differs AND its solved cost undercuts the deployed plan's
+    re-priced cost by more than ``hysteresis`` (fraction, default the
+    autotuner's 5%). Perturbing every calibration scale by a factor within
+    ``1 ± hysteresis/2`` can shift the deployed/candidate cost ratio by at
+    most ~2×(hysteresis/2), so sub-hysteresis measurement noise can never
+    flip the deployed plan — the stability property
+    ``tests/test_property.py`` checks.
+
+    ``map_kwargs`` must repeat the kwargs the deployed plan was mapped
+    with (menu/spec/solver/...): the deployed assignment's choice indices
+    are only meaningful on an identically-shaped cost graph."""
+    candidate = map_network(graph, calibration=calibration, **map_kwargs)
+    builder_kw = {k: v for k, v in map_kwargs.items() if k != "solver"}
+    hw = builder_kw.pop("hw", None)
+    menu = builder_kw.pop("menu", None)
+    spec = builder_kw.pop("spec", V5E)
+    if hw is None:
+        hw = identify_parameters(graph, menu=menu, spec=spec)
+    builder = CostGraphBuilder(graph, hw, menu=menu, spec=spec,
+                               calibration=calibration, **builder_kw)
+    pbqp, _ = builder.build()
+    deployed_cost = pbqp.total_cost(deployed.solver.assignment)
+    changed = plan_fingerprint(candidate) != plan_fingerprint(deployed)
+    adopted = changed and \
+        candidate.total_cost_s < deployed_cost * (1.0 - hysteresis)
+    return ReplanResult(plan=candidate if adopted else deployed,
+                        candidate=candidate, adopted=adopted,
+                        changed=changed,
+                        deployed_cost_s=deployed_cost,
+                        candidate_cost_s=candidate.total_cost_s)
 
 
 def evaluate_fixed_mapping(graph: Graph, policy: str,

@@ -90,6 +90,15 @@ class FaultPlan:
     def __len__(self) -> int:
         return len(self.faults)
 
+    def offset(self, n: int) -> "FaultPlan":
+        """A copy of this plan shifted ``n`` dispatch indices later
+        (negative ``n`` shifts earlier; faults pushed below index 0 drop).
+        Lets a schedule authored relative to an event — e.g. "one failure
+        on each of the first two ticks after the hot-swap" — be pinned to
+        the absolute dispatch index where that event lands in a trace."""
+        return FaultPlan({k + n: v for k, v in self.faults.items()
+                          if k + n >= 0})
+
     @classmethod
     def seeded(cls, seed: int, n_ticks: int,
                fail_rate: float = 0.0, failures: int = 1,

@@ -186,7 +186,11 @@ class InflightTick:
     """One dispatched-but-not-retired tick: the in-flight device output
     plus everything completion needs to unpack it and write traces. The
     staging buffer index pins which rotating host buffer this tick was
-    packed from — that buffer is not reused until this tick retires."""
+    packed from — that buffer is not reused until this tick retires.
+    ``run`` pins the bucket executable the tick was dispatched on: a plan
+    hot-swap between dispatch and retirement must not change what an
+    in-flight tick computes, so completion-surfaced fault replays re-run
+    THIS callable, never the (possibly swapped) current ladder's."""
     bucket: int
     reqs: List[CNNRequest]
     out: object                        # in-flight jax.Array
@@ -198,6 +202,7 @@ class InflightTick:
     tick_idx: int = 0                  # global dispatch index (FaultPlan key)
     fault: object = None               # planned TickFault for this tick
     attempt: int = 0                   # dispatch attempts already burned
+    run: object = None                 # executable the tick dispatched on
 
 
 class CNNServingEngine:
@@ -350,18 +355,20 @@ class CNNServingEngine:
         # each invocation; warmup never sets one, so warmup ticks can
         # neither consume nor trip planned faults.
         self._fault_ctx: tuple = (None, 0)
-        hook = self._fault_hook if fault_plan is not None else None
-        self._runs = {
-            bucket: compile_plan(graph, plan, default_algo=default_algo,
-                                 use_pallas=use_pallas, interpret=interpret,
-                                 epilogue=epilogue, tuning=tuning,
-                                 tuning_batch=bucket // self.data_shards,
-                                 mesh=mesh,
-                                 donate=self.pipeline_depth > 1,
-                                 fault_hook=hook, cache=cache,
-                                 act_scales=act_scales)
-            for bucket in self.buckets
-        }
+        # The deployed plan plus everything needed to rebuild the ladder
+        # for a DIFFERENT plan with identical compile options — the
+        # hot-swap path (``compile_ladder``/``swap_plan``) recompiles with
+        # exactly these, so a swapped engine differs from a fresh one only
+        # in the plan.
+        self.plan = plan
+        self.tuning = tuning
+        self._compile_kw = dict(default_algo=default_algo,
+                                use_pallas=use_pallas, interpret=interpret,
+                                epilogue=epilogue, tuning=tuning)
+        self.plan_swaps = 0
+        self.plan_rollbacks = 0
+        self._runs = self.compile_ladder(plan, act_scales=act_scales,
+                                         warm=False)
         # Rotating staging buffers sized for the largest bucket, allocated
         # ONCE (one per pipeline slot; the synchronous engine keeps the
         # single PR-3 buffer). _filled tracks, per buffer, how many leading
@@ -630,7 +637,8 @@ class CNNServingEngine:
                             ready_at_pc=(t_launch + self.device_delay_s
                                          + (fault.delay_s if fault else 0.0)),
                             buf_index=self._last_buf_index,
-                            tick_idx=tick_idx, fault=fault, attempt=attempt)
+                            tick_idx=tick_idx, fault=fault, attempt=attempt,
+                            run=self._runs[bucket])
         if out is None:
             # Launch retries exhausted: fail cleanly — requests get their
             # terminal outcome, the staging buffer is simply left to the
@@ -794,12 +802,15 @@ class CNNServingEngine:
                 self._backoff_sleep(tick.attempt)
                 tick.attempt += 1
                 # Replay from the pinned staging buffer — rotation
-                # guarantees it still holds exactly this tick's images.
+                # guarantees it still holds exactly this tick's images —
+                # on the tick's pinned executable: a hot-swap between
+                # dispatch and this replay must not change the math.
                 x = self._batch_bufs[tick.buf_index]
+                run = tick.run if tick.run is not None \
+                    else self._runs[tick.bucket]
                 try:
                     self._fault_ctx = (tick.tick_idx, tick.attempt)
-                    tick.out = self._runs[tick.bucket](
-                        self.params, x[:tick.bucket])
+                    tick.out = run(self.params, x[:tick.bucket])
                 finally:
                     self._fault_ctx = (None, 0)
                 out = jax.block_until_ready(tick.out)
@@ -1038,6 +1049,14 @@ class CNNServingEngine:
                 "per_chip_batch": {b: b // self.data_shards
                                    for b in self.buckets},
             },
+            # Deployment history of the served plan: how many times the
+            # ladder was hot-swapped (supervisor adoptions) and rolled
+            # back. Counters survive reset() — deployment events are
+            # engine-lifetime history, not per-trace request accounting.
+            "plan": {
+                "swaps": self.plan_swaps,
+                "rollbacks": self.plan_rollbacks,
+            },
             # Per-layer precision mix of the served plan: conv layer
             # counts per precision plus the int8 layer ids — the
             # operator-facing audit of what the quantization gate kept.
@@ -1089,6 +1108,87 @@ class CNNServingEngine:
             if self.step(flush=True) == 0:
                 break
         return self.drain()
+
+    # ----------------------------------------------------- plan hot-swap
+    def compile_ladder(self, plan: Optional[ExecutionPlan],
+                       act_scales: Optional[Dict[int, float]] = None,
+                       warm: bool = True) -> Dict[int, Callable]:
+        """Compile one bucket ladder for ``plan`` under this engine's
+        compile options (backend, epilogue, tuning record, mesh, donation,
+        fault hook, shared cache) — the same call the constructor makes,
+        so a ladder compiled here and swapped in is indistinguishable from
+        constructing a fresh engine on ``plan``. Pure with respect to
+        engine state: safe to call from a background thread (the shared
+        ``ExecutableCache`` serializes concurrent compiles internally) and
+        hand the result to ``swap_plan`` on the serving thread.
+
+        ``warm=True`` invokes each executable once on an all-zeros batch
+        (result discarded) so the JIT trace is paid here — on the compile
+        thread — rather than by the first post-swap serving tick, whose
+        wall time feeds the service EMAs and the supervisor's probation
+        check."""
+        hook = self._fault_hook if self.fault_plan is not None else None
+        runs = {
+            bucket: compile_plan(self.graph, plan,
+                                 tuning_batch=bucket // self.data_shards,
+                                 mesh=self.mesh,
+                                 donate=self.pipeline_depth > 1,
+                                 fault_hook=hook, cache=self.cache,
+                                 act_scales=act_scales,
+                                 **self._compile_kw)
+            for bucket in self.buckets
+        }
+        if warm:
+            for bucket, run in runs.items():
+                x = np.zeros((bucket,) + self._shape, self.dtype)
+                jax.block_until_ready(run(self.params, x))
+        return runs
+
+    def swap_plan(self, plan: Optional[ExecutionPlan],
+                  runs: Optional[Dict[int, Callable]] = None, *,
+                  act_scales: Optional[Dict[int, float]] = None,
+                  rollback: bool = False) -> tuple:
+        """Atomically deploy a new plan between ticks.
+
+        Replaces the bucket ladder (``runs``, or compiled here via
+        ``compile_ladder`` when None) plus the plan-derived state
+        (``plan``/``precisions``/``act_scales``) in one step on the
+        serving thread — the engine is single-threaded, so "atomic" means
+        no tick can observe a half-swapped ladder: every dispatch before
+        this call ran entirely on the old ladder, every one after runs
+        entirely on the new.
+
+        Everything else is deliberately preserved: the outcome ledger
+        (conservation holds across the swap — a swap is not a request
+        outcome), queued requests, in-flight ticks (each pinned its
+        executable at dispatch and retires against the OLD ladder, fault
+        replays included), and the per-bucket service EMAs (they are the
+        scheduler's only deadline estimate; the 0.5/0.5 EMA re-converges
+        on the new plan within a few ticks, and the supervisor snapshots
+        pre-swap values for its regression check).
+
+        Returns ``(old_plan, old_runs, old_act_scales)`` so the caller can
+        re-arm the previous deployment (``rollback=True`` books the swap
+        under the rollback counter instead)."""
+        if runs is None:
+            runs = self.compile_ladder(plan, act_scales=act_scales)
+        missing = [b for b in self.buckets if b not in runs]
+        if missing:
+            raise ValueError(
+                f"swap_plan ladder is missing buckets {missing} — a "
+                "partial ladder would strand those buckets on the old "
+                "plan; compile via compile_ladder(plan)")
+        old = (self.plan, self._runs, self.act_scales)
+        self.plan = plan
+        self._runs = {b: runs[b] for b in self.buckets}
+        self.act_scales = act_scales
+        self.precisions = dict(getattr(plan, "precisions", None) or {}) \
+            if plan is not None else {}
+        if rollback:
+            self.plan_rollbacks += 1
+        else:
+            self.plan_swaps += 1
+        return old
 
     # ------------------------------------------------------------ warmup
     def _warmup(self) -> None:

@@ -114,6 +114,18 @@ class MultiModelEngine:
     def model_names(self) -> List[str]:
         return list(self._order)
 
+    def swap_plan(self, model: str, plan, runs=None, *,
+                  act_scales=None, rollback: bool = False) -> tuple:
+        """Hot-swap one tenant's deployed plan
+        (``CNNServingEngine.swap_plan`` on that tenant, between joint
+        ticks). Tenant isolation holds by construction: the shared
+        ``ExecutableCache`` never evicts, so compiling the new ladder can
+        only *add* entries (other tenants' executables stay resident),
+        and every other tenant's ladder, ledger, queue, and EMAs are
+        untouched (``tests/test_multi_model.py`` pins this)."""
+        return self._engine(model).swap_plan(
+            plan, runs, act_scales=act_scales, rollback=rollback)
+
     def _engine(self, model: str) -> CNNServingEngine:
         try:
             return self.engines[model]

@@ -120,3 +120,162 @@ def test_tuned_compiled_plan_equivalent():
 def test_version_mismatch_rejected():
     with pytest.raises(ValueError, match="version"):
         TuningRecord.from_json({"version": 99, "entries": {}})
+
+
+# ---------------------------------------------------------------------------
+# Regression coverage (PR 10): merge incumbents-win semantics under
+# precision-keyed entries combined with v1→v2 migration — PR 8 added
+# merge, PR 9 added "#int8" keys, but the combination was untested.
+# ---------------------------------------------------------------------------
+
+def _tuning(label_s: float, batch: int = 1,
+            precision: str = "bf16") -> "LayerTuning":
+    from repro.core.autotune import LayerTuning
+    b = Binding("im2col", "NS", 128, 128, "reference")
+    return LayerTuning(binding=b, measured_s=label_s,
+                       candidates=[(b.label(), label_s)],
+                       batch=batch, precision=precision)
+
+
+class TestMergePrecisionMigration:
+    def test_precision_keys_never_collide(self):
+        """bf16 and int8 measurements of the same (sig, bucket) are
+        distinct keys — merge can adopt one without touching the other."""
+        k_bf16 = record_key(CONV, 4)
+        k_int8 = record_key(CONV, 4, precision="int8")
+        assert k_bf16 != k_int8 and k_int8.endswith("#int8")
+        mine = TuningRecord({k_bf16: _tuning(1.0, 4)})
+        theirs = TuningRecord({k_bf16: _tuning(9.0, 4),
+                               k_int8: _tuning(0.5, 4, "int8")})
+        adopted = mine.merge(theirs)
+        assert adopted == 1                       # only the int8 entry
+        assert mine.entries[k_bf16].measured_s == 1.0   # incumbent wins
+        assert mine.entries[k_int8].measured_s == 0.5
+        assert mine.entries[k_int8].precision == "int8"
+
+    def test_lookup_bucket_fallback_is_precision_strict(self):
+        """Bucket fallback (largest tuned bucket below) never crosses
+        precisions: an int8 layer with only bf16 measurements gets None,
+        not a silently-wrong bf16 binding."""
+        rec = TuningRecord({record_key(CONV, 2): _tuning(1.0, 2),
+                            record_key(CONV, 2, "int8"):
+                                _tuning(0.5, 2, "int8")})
+        assert rec.lookup(CONV, batch=8).measured_s == 1.0
+        assert rec.lookup(CONV, batch=8, precision="int8").measured_s == 0.5
+        only_bf16 = TuningRecord({record_key(CONV, 2): _tuning(1.0, 2)})
+        assert only_bf16.lookup(CONV, batch=8, precision="int8") is None
+
+    def test_v1_migration_then_merge_keeps_incumbents(self):
+        """A v1 blob (bare-signature keys, whole record at one batch)
+        migrates to "sig@bN" keys; merging it into a v2 record that
+        already measured the same bucket adopts nothing, while new
+        buckets and int8 entries flow through."""
+        v1_blob = {
+            "version": 1,
+            "meta": {"batch": 4},
+            "entries": {
+                conv_key(CONV): {
+                    "binding": {"algo_key": "kn2row", "dataflow": "WS",
+                                "p1": 128, "p2": 128,
+                                "backend": "reference"},
+                    "measured_s": 7.0,
+                    "candidates": [["kn2row|WS|128x128|reference", 7.0]],
+                },
+            },
+        }
+        migrated = TuningRecord.from_json(v1_blob)
+        key4 = record_key(CONV, 4)
+        assert set(migrated.entries) == {key4}    # bare key → "@b4"
+        assert migrated.entries[key4].batch == 4
+        assert migrated.entries[key4].precision == "bf16"
+
+        # v1 round-trips forward: re-serialized blobs are v2.
+        assert migrated.to_json()["version"] == 2
+        assert TuningRecord.from_json(
+            migrated.to_json()).entries.keys() == {key4}
+
+        mine = TuningRecord({key4: _tuning(1.0, 4),
+                             record_key(CONV, 4, "int8"):
+                                 _tuning(0.4, 4, "int8")})
+        adopted = mine.merge(migrated)
+        assert adopted == 0                       # incumbent at @b4 wins
+        assert mine.entries[key4].measured_s == 1.0
+        # The reverse direction adopts the incumbents-free keys only.
+        adopted = migrated.merge(mine)
+        assert adopted == 1                       # just the int8 key
+        assert migrated.entries[key4].measured_s == 7.0
+        assert migrated.entries[record_key(CONV, 4, "int8")].precision \
+            == "int8"
+
+    def test_v1_without_batch_meta_lands_in_bucket_1(self):
+        v1_blob = {"version": 1, "meta": {}, "entries": {
+            conv_key(CONV): {
+                "binding": {"algo_key": "im2col", "dataflow": "NS",
+                            "p1": 128, "p2": 128, "backend": "reference"},
+                "measured_s": 3.0, "candidates": []}}}
+        rec = TuningRecord.from_json(v1_blob)
+        assert set(rec.entries) == {record_key(CONV, 1)}
+
+
+# ---------------------------------------------------------------------------
+# Live refresh from serving EMAs (PR 10 closed loop).
+# ---------------------------------------------------------------------------
+
+class TestRefreshFromService:
+    def _graph_record(self):
+        from repro.core.autotune import refresh_from_service  # noqa: F401
+        g = vgg16(res=8, scale=0.05)
+        rec = TuningRecord()
+        for node in g.conv_nodes():
+            for bucket in (1, 4):
+                rec.entries[record_key(node.conv, bucket)] = \
+                    _tuning(0.001, bucket)
+        return g, rec
+
+    def test_divergent_ema_rescales_exact_bucket_only(self):
+        from repro.core.autotune import refresh_from_service
+        g, rec = self._graph_record()
+        n_convs = len(list(g.conv_nodes()))
+        expected = n_convs * 0.001
+        applied = refresh_from_service(rec, g, {4: 2.0 * expected})
+        assert applied == {4: pytest.approx(2.0)}
+        for node in g.conv_nodes():
+            assert rec.entries[record_key(node.conv, 4)].measured_s \
+                == pytest.approx(0.002)
+            # candidates rescale with the winner; bucket 1 untouched
+            _, cand_s = rec.entries[record_key(node.conv, 4)].candidates[0]
+            assert cand_s == pytest.approx(0.002)
+            assert rec.entries[record_key(node.conv, 1)].measured_s \
+                == pytest.approx(0.001)
+        assert rec.meta["live_refresh"] == {"4": pytest.approx(2.0)}
+
+    def test_sub_hysteresis_divergence_holds_steady(self):
+        from repro.core.autotune import refresh_from_service
+        g, rec = self._graph_record()
+        expected = len(list(g.conv_nodes())) * 0.001
+        applied = refresh_from_service(rec, g, {4: 1.03 * expected})
+        assert applied == {}
+        assert "live_refresh" not in rec.meta
+        assert rec.entries[record_key(
+            next(iter(g.conv_nodes())).conv, 4)].measured_s \
+            == pytest.approx(0.001)
+
+    def test_refresh_scales_accumulate(self):
+        from repro.core.autotune import refresh_from_service
+        g, rec = self._graph_record()
+        expected = len(list(g.conv_nodes())) * 0.001
+        refresh_from_service(rec, g, {4: 2.0 * expected})
+        # After the rescale the record predicts 2x; a further 1.5x EMA
+        # accumulates multiplicatively in the meta log.
+        refresh_from_service(rec, g, {4: 3.0 * expected})
+        assert rec.meta["live_refresh"]["4"] == pytest.approx(3.0)
+
+    def test_bindings_never_rerank(self):
+        """A uniform rescale cannot flip winners — the binding is
+        untouched even when measured_s doubles."""
+        from repro.core.autotune import refresh_from_service
+        g, rec = self._graph_record()
+        before = {k: t.binding for k, t in rec.entries.items()}
+        expected = len(list(g.conv_nodes())) * 0.001
+        refresh_from_service(rec, g, {4: 2.0 * expected})
+        assert {k: t.binding for k, t in rec.entries.items()} == before

@@ -308,3 +308,63 @@ class TestMultiModelEngine:
         assert "robustness" in st["models"]["a"]
         assert st["global"]["submitted"] == 1
         assert st["global"]["queued"] == 0
+
+    def test_swap_isolation_across_tenants(self, tiny):
+        """PR 10: hot-swapping tenant a's plan must not evict tenant b's
+        cache entries (the shared cache never evicts — a swap only adds)
+        nor perturb b's ladder, ledger, EMAs, or queued work."""
+        from repro.core.cost_model import TransitionCalibration
+        from repro.core.dse import identify_parameters
+        from repro.core.mapper import map_network, plan_fingerprint
+        g, _ = tiny
+        hw = identify_parameters(g)
+        plan_a = map_network(g, hw=hw, use_on_chip=False)
+        plan_b = map_network(g, hw=hw, use_on_chip=False,
+                             calibration=TransitionCalibration(default=6.0))
+        assert plan_fingerprint(plan_a) != plan_fingerprint(plan_b)
+
+        pa = init_params(g, jax.random.PRNGKey(0))
+        pb = init_params(g, jax.random.PRNGKey(1))
+        multi = MultiModelEngine(clock=FakeClock())
+        multi.register_model("a", g, pa, plan_a, batch_size=4)
+        multi.register_model("b", g, pb, plan_a, batch_size=4)
+        for name in ("a", "b"):
+            for i in range(4):
+                multi.submit(name, CNNRequest(rid=i, image=img(),
+                                              t_submit=0.0))
+        multi.step(now=1.0, flush=True)
+
+        eng_b = multi.engines["b"]
+        b_runs = eng_b._runs                  # object identity must hold
+        b_ledger = dict(eng_b.stats()["robustness"]["outcomes"])
+        b_emas = dict(eng_b._svc)
+        b_done = set(eng_b.done)
+        cache_entries = multi.cache.stats()["entries"]
+
+        old = multi.swap_plan("a", plan_b)
+        assert plan_fingerprint(old[0]) == plan_fingerprint(plan_a)
+        assert plan_fingerprint(multi.engines["a"].plan) \
+            == plan_fingerprint(plan_b)
+        # b is untouched: same ladder objects, ledger, EMAs, results.
+        assert eng_b._runs is b_runs
+        assert plan_fingerprint(eng_b.plan) == plan_fingerprint(plan_a)
+        assert dict(eng_b.stats()["robustness"]["outcomes"]) == b_ledger
+        assert dict(eng_b._svc) == b_emas
+        assert set(eng_b.done) == b_done
+        # The shared cache only grew (plan_b's ladder); nothing evicted.
+        assert multi.cache.stats()["entries"] >= cache_entries
+        assert multi.engines["a"].stats()["plan"]["swaps"] == 1
+        assert eng_b.stats()["plan"]["swaps"] == 0
+
+        # Joint serving continues conserved on both sides of the swap.
+        for name in ("a", "b"):
+            for i in range(4, 8):
+                multi.submit(name, CNNRequest(rid=i, image=img(),
+                                              t_submit=2.0))
+        multi.run_until_done()
+        assert all(conserved(e) for e in multi.engines.values())
+        assert set(multi.engines["a"].done) == set(range(8))
+        assert set(eng_b.done) == set(range(8))
+
+        with pytest.raises(KeyError, match="unknown model"):
+            multi.swap_plan("nope", plan_b)

@@ -1,0 +1,525 @@
+"""Plan hot-swap equivalence suite (PR 10) — the gate on the closed
+self-optimization loop.
+
+Pins the three tentpole pieces end to end:
+
+* **Calibrated re-pricing** — ``map_network(calibration=)`` /
+  ``replan``: a measured ``TransitionCalibration`` provably flips the
+  PBQP winner, re-solves are deterministic, sub-hysteresis perturbations
+  never churn the deployed plan, and the single-channel calibration
+  plumbing (``lower_plan`` → ``LoweredProgram.calibration`` →
+  ``transition_report``) prices identically to the deprecated direct
+  kwarg.
+* **Atomic hot-swap** — ``CNNServingEngine.swap_plan``: outputs are
+  bitwise identical across the swap boundary for requests completed
+  before/during/after the swap (including in-flight ticks at
+  ``pipeline_depth=2`` retiring against the old ladder, fault replays
+  included), the conserved outcome ledger survives swap × ``FaultPlan``,
+  and partial ladders are rejected.
+* **The supervisor loop** — ``serving.supervisor.PlanSupervisor``: a
+  deterministic end-to-end run where an injected service-time shift
+  flips the deployed plan exactly once (and legitimately holds the new
+  plan inside hysteresis after recovery), plus probation rollback
+  exercised under fault injection (failed ticks never count as
+  regression samples).
+
+Timing-sensitive tests ride a ``device_delay_s`` floor that dominates
+real kernel wall-time jitter, so every decision the loop makes is
+reproducible on a noisy host.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cnn.executor import ExecutableCache, init_params
+from repro.cnn.models import vgg16
+from repro.core.cost_model import TransitionCalibration
+from repro.core.dse import identify_parameters
+from repro.core.mapper import (lower_plan, map_network, plan_fingerprint,
+                               replan, transition_report)
+from repro.distributed.fault import FaultPlan, TickFault
+from repro.serving.cnn_engine import (OUTCOME_FAILED, CNNRequest,
+                                      CNNServingEngine)
+from repro.serving.supervisor import (COMPILING, MONITOR, PROBATION,
+                                      PlanSupervisor)
+
+RNG = np.random.default_rng(21)
+N_IMAGES = 64
+IMAGES = [np.asarray(RNG.standard_normal((8, 8, 3)), np.float32)
+          for _ in range(N_IMAGES)]
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = vgg16(res=8, scale=0.05)
+    hw = identify_parameters(g)
+    params = init_params(g, jax.random.PRNGKey(0))
+    return g, hw, params
+
+
+@pytest.fixture(scope="module")
+def plans(tiny):
+    """Plan A: the uncalibrated PBQP winner. Plan B: the winner when
+    every transition is measured 6x more expensive than modeled (the
+    DDR-contention regime) — a genuinely different assignment."""
+    g, hw, _ = tiny
+    pa = map_network(g, hw=hw, use_on_chip=False)
+    pb = map_network(g, hw=hw, use_on_chip=False,
+                     calibration=TransitionCalibration(default=6.0))
+    assert plan_fingerprint(pa) != plan_fingerprint(pb)
+    return pa, pb
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return ExecutableCache()
+
+
+def conserved(eng) -> bool:
+    rb = eng.stats()["robustness"]
+    return (sum(rb["outcomes"].values()) + rb["pending"]
+            == eng.submitted_total)
+
+
+def submit_batch(eng, clock, start_rid, n=4):
+    """Submit n requests with fresh rids; images cycle through the fixed
+    pool, so any two engines fed the same rid range see the same bits."""
+    for i in range(n):
+        rid = start_rid + i
+        eng.submit(CNNRequest(rid=rid, image=IMAGES[rid % N_IMAGES],
+                              t_submit=clock.t))
+    return start_rid + n
+
+
+def reference_outputs(tiny, plan, cache, n, **engine_kwargs):
+    """Serve IMAGES[:n] to completion on a single fixed plan."""
+    g, _, params = tiny
+    clock = FakeClock()
+    eng = CNNServingEngine(g, params, plan, batch_size=4, clock=clock,
+                           cache=cache, **engine_kwargs)
+    rid = 0
+    while rid < n:
+        rid = submit_batch(eng, clock, rid)
+        eng.step(flush=True)
+        clock.t += 1.0
+    eng.run_until_done()
+    assert set(eng.done) == set(range(n))
+    return dict(eng.done)
+
+
+# ---------------------------------------------------------------------------
+# Calibrated re-pricing (replan) semantics.
+# ---------------------------------------------------------------------------
+
+class TestCalibratedReplan:
+    def test_uncalibrated_replan_is_a_fixed_point(self, tiny, plans):
+        g, hw, _ = tiny
+        pa, _ = plans
+        r = replan(g, pa, calibration=None, hw=hw, use_on_chip=False)
+        assert not r.changed and not r.adopted
+        assert plan_fingerprint(r.plan) == plan_fingerprint(pa)
+        assert r.candidate_cost_s == pytest.approx(r.deployed_cost_s)
+
+    def test_measured_shift_flips_and_clears_hysteresis(self, tiny, plans):
+        g, hw, _ = tiny
+        pa, pb = plans
+        r = replan(g, pa, calibration=TransitionCalibration(default=6.0),
+                   hw=hw, use_on_chip=False)
+        assert r.changed and r.adopted
+        assert plan_fingerprint(r.plan) == plan_fingerprint(pb)
+        # Both costs priced on the SAME calibrated graph; adoption means
+        # the candidate cleared the 5% gate on it.
+        assert r.candidate_cost_s < r.deployed_cost_s * 0.95
+
+    def test_reverting_inside_hysteresis_is_held(self, tiny, plans):
+        """After recovery (calibration back to 1.0) plan A prices
+        cheaper than deployed B — but by less than the 5% gate, so the
+        supervisor legitimately keeps B. Pins the margin so a cost-model
+        change that breaks this invariant is caught here, not as a
+        mystery plan-flap in serving."""
+        g, hw, _ = tiny
+        pa, pb = plans
+        r = replan(g, pb, calibration=None, hw=hw, use_on_chip=False)
+        assert r.changed and not r.adopted
+        margin = 1.0 - r.candidate_cost_s / r.deployed_cost_s
+        assert 0.0 < margin < 0.05
+
+    def test_resolve_is_deterministic(self, tiny):
+        g, hw, _ = tiny
+        cal = TransitionCalibration(default=3.7)
+        fps = {plan_fingerprint(map_network(g, hw=hw, use_on_chip=False,
+                                            calibration=cal))
+               for _ in range(3)}
+        assert len(fps) == 1
+
+    def test_sub_hysteresis_perturbation_never_churns(self, tiny):
+        """Seeded version of the hypothesis property (which skips when
+        hypothesis is absent): per-pair scale noise within 1±2% — under
+        half the 5% hysteresis, so the deployed/candidate cost ratio
+        moves by less than the gate — never triggers adoption."""
+        from repro.core.algorithms import Layout
+        g, hw, _ = tiny
+        base = TransitionCalibration(default=2.0)
+        deployed = map_network(g, hw=hw, use_on_chip=False,
+                               calibration=base)
+        rng = np.random.default_rng(99)
+        pairs = [(a, b) for a in Layout for b in Layout]
+        for _ in range(20):
+            noisy = TransitionCalibration(
+                scales={p: 2.0 * (1.0 + rng.uniform(-0.02, 0.02))
+                        for p in pairs},
+                default=2.0)
+            r = replan(g, deployed, calibration=noisy,
+                       hw=hw, use_on_chip=False)
+            assert not r.adopted
+
+
+class TestCalibrationSingleChannel:
+    """Satellite: one ``calibration=`` kwarg through
+    ``map_network``/``lower_plan``; the old ``transition_report``
+    side-channel is deprecated but prices identically."""
+
+    def test_lowered_program_carries_calibration(self, tiny, plans):
+        g, _, _ = tiny
+        pa, _ = plans
+        cal = TransitionCalibration(default=3.0)
+        low = lower_plan(g, pa, calibration=cal)
+        assert low.calibration is cal
+        assert lower_plan(g, pa).calibration is None
+
+    def test_both_routes_price_identically(self, tiny, plans):
+        g, _, _ = tiny
+        pa, _ = plans
+        cal = TransitionCalibration(default=3.0)
+        rep_new = transition_report(g, lower_plan(g, pa, calibration=cal))
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            rep_old = transition_report(g, lower_plan(g, pa),
+                                        calibration=cal)
+        assert rep_new["predicted_roundtrip_s"] == \
+            rep_old["predicted_roundtrip_s"]
+        assert rep_new["predicted_elided_s"] == rep_old["predicted_elided_s"]
+        assert [e["saving_s"] for e in rep_new["edges"]] == \
+            [e["saving_s"] for e in rep_old["edges"]]
+        # Non-vacuous: the calibration actually moved the prices.
+        rep_uncal = transition_report(g, lower_plan(g, pa))
+        assert rep_uncal["predicted_roundtrip_s"] != \
+            rep_new["predicted_roundtrip_s"]
+
+    def test_explicit_kwarg_wins_over_carried(self, tiny, plans):
+        g, _, _ = tiny
+        pa, _ = plans
+        low = lower_plan(g, pa,
+                         calibration=TransitionCalibration(default=3.0))
+        with pytest.warns(DeprecationWarning):
+            rep = transition_report(
+                g, low, calibration=TransitionCalibration(default=1.0))
+        rep_uncal = transition_report(g, lower_plan(g, pa))
+        assert rep["predicted_roundtrip_s"] == \
+            rep_uncal["predicted_roundtrip_s"]
+
+
+# ---------------------------------------------------------------------------
+# Atomic hot-swap: bitwise equivalence across the boundary.
+# ---------------------------------------------------------------------------
+
+class TestSwapBitwise:
+    def test_outputs_bitwise_across_swap_boundary(self, tiny, plans, cache):
+        g, _, params = tiny
+        pa, pb = plans
+        ref_a = reference_outputs(tiny, pa, cache, 24)
+        ref_b = reference_outputs(tiny, pb, cache, 24)
+        # The two plans must disagree somewhere or the test is vacuous
+        # (bitwise equality would hold trivially).
+        assert any(not np.array_equal(ref_a[r], ref_b[r])
+                   for r in range(24))
+
+        clock = FakeClock()
+        eng = CNNServingEngine(g, params, pa, batch_size=4, clock=clock,
+                               cache=cache)
+        rid = 0
+        for _ in range(3):                       # ticks 0-2 on plan A
+            rid = submit_batch(eng, clock, rid)
+            eng.step(flush=True)
+            clock.t += 1.0
+        pre_swap = set(eng.done)
+        assert pre_swap == set(range(12))
+        eng.swap_plan(pb)                        # between ticks
+        for _ in range(3):                       # ticks 3-5 on plan B
+            rid = submit_batch(eng, clock, rid)
+            eng.step(flush=True)
+            clock.t += 1.0
+        eng.run_until_done()
+
+        for r in sorted(pre_swap):
+            assert np.array_equal(eng.done[r], ref_a[r])
+        for r in range(12, 24):
+            assert np.array_equal(eng.done[r], ref_b[r])
+        assert conserved(eng)
+        assert eng.stats()["plan"] == {"swaps": 1, "rollbacks": 0}
+
+    def test_inflight_ticks_retire_on_old_ladder(self, tiny, plans, cache):
+        """pipeline_depth=2: a tick dispatched before the swap but
+        retired after it must produce plan-A bits — the executable was
+        pinned at dispatch."""
+        g, _, params = tiny
+        pa, pb = plans
+        ref_a = reference_outputs(tiny, pa, cache, 16)
+        ref_b = reference_outputs(tiny, pb, cache, 16)
+
+        clock = FakeClock()
+        eng = CNNServingEngine(g, params, pa, batch_size=4, clock=clock,
+                               cache=cache, pipeline_depth=2)
+        rid = submit_batch(eng, clock, 0, n=8)
+        eng.step(flush=True)                     # dispatch tick 0 (async)
+        eng.step(flush=True)                     # dispatch tick 1
+        assert eng.stats()["pipeline"]["inflight"] >= 1
+        inflight_rids = set(eng._inflight_rids)
+        assert inflight_rids                     # swap with work in flight
+        eng.swap_plan(pb)
+        rid = submit_batch(eng, clock, rid, n=8)
+        eng.step(flush=True)
+        eng.step(flush=True)
+        eng.run_until_done()
+
+        for r in range(8):                       # dispatched pre-swap
+            assert np.array_equal(eng.done[r], ref_a[r])
+        for r in range(8, 16):                   # dispatched post-swap
+            assert np.array_equal(eng.done[r], ref_b[r])
+        assert conserved(eng)
+
+    def test_completion_fault_replays_on_pinned_executable(
+            self, tiny, plans, cache):
+        """A completion-surfaced fault on an in-flight tick replays on
+        the tick's pinned (old-ladder) executable even when the swap
+        landed between dispatch and replay — bitwise plan-A output."""
+        g, _, params = tiny
+        pa, pb = plans
+        ref_a = reference_outputs(tiny, pa, cache, 8)
+
+        clock = FakeClock()
+        eng = CNNServingEngine(
+            g, params, pa, batch_size=4, clock=clock, cache=cache,
+            pipeline_depth=2, max_retries=2, retry_backoff_s=0.0,
+            fault_plan=FaultPlan({1: TickFault(failures=1)}))
+        rid = submit_batch(eng, clock, 0, n=8)
+        eng.step(flush=True)
+        eng.step(flush=True)                     # tick 1 dispatched, faulty
+        eng.swap_plan(pb)                        # swap while it's in flight
+        eng.run_until_done()
+        assert eng.retries_total >= 1
+        for r in range(8):
+            assert np.array_equal(eng.done[r], ref_a[r])
+        assert conserved(eng)
+
+    def test_ledger_conserved_under_swap_x_faults(self, tiny, plans, cache):
+        """FaultPlan.offset pins an event-relative schedule ("the first
+        post-swap tick fails hard") to absolute dispatch indices; the
+        outcome ledger stays conserved through swap + terminal failure."""
+        g, _, params = tiny
+        pa, pb = plans
+        post_swap_fail = FaultPlan({0: TickFault(failures=5)})
+        clock = FakeClock()
+        eng = CNNServingEngine(
+            g, params, pa, batch_size=4, clock=clock, cache=cache,
+            max_retries=1, retry_backoff_s=0.0,
+            fault_plan=post_swap_fail.offset(2))
+        rid = 0
+        for _ in range(2):                       # ticks 0-1: clean, plan A
+            rid = submit_batch(eng, clock, rid)
+            eng.step(flush=True)
+            clock.t += 1.0
+        eng.swap_plan(pb)
+        for _ in range(2):                       # tick 2 fails terminally
+            rid = submit_batch(eng, clock, rid)
+            eng.step(flush=True)
+            clock.t += 1.0
+        eng.run_until_done()
+        rb = eng.stats()["robustness"]
+        assert rb["outcomes"][OUTCOME_FAILED] == 4
+        assert set(range(8, 12)).isdisjoint(eng.done)
+        assert set(eng.done) == set(range(8)) | set(range(12, 16))
+        assert conserved(eng)
+
+    def test_fault_plan_offset_semantics(self):
+        f = TickFault(failures=1)
+        p = FaultPlan({0: f, 3: f})
+        assert set(p.offset(2).faults) == {2, 5}
+        assert set(p.offset(-1).faults) == {2}   # index -1 drops
+        assert p.offset(0).faults == p.faults
+        assert p.offset(2).faults[2] is f
+
+    def test_swap_rejects_partial_ladder_and_counts(self, tiny, plans,
+                                                    cache):
+        g, _, params = tiny
+        pa, pb = plans
+        eng = CNNServingEngine(g, params, pa, batch_size=4,
+                               clock=FakeClock(), cache=cache)
+        runs = eng.compile_ladder(pb, warm=False)
+        some_bucket = next(iter(runs))
+        partial = {b: r for b, r in runs.items() if b != some_bucket}
+        with pytest.raises(ValueError, match="missing buckets"):
+            eng.swap_plan(pb, partial)
+        # Clean swap returns the previous deployment; re-arming it books
+        # under the rollback counter. Counters survive reset() — they are
+        # engine-lifetime deployment history, not per-trace state.
+        old_plan, old_runs, old_scales = eng.swap_plan(pb, runs)
+        assert plan_fingerprint(old_plan) == plan_fingerprint(pa)
+        eng.swap_plan(old_plan, old_runs, act_scales=old_scales,
+                      rollback=True)
+        assert eng.stats()["plan"] == {"swaps": 1, "rollbacks": 1}
+        eng.reset()
+        assert eng.stats()["plan"] == {"swaps": 1, "rollbacks": 1}
+
+
+# ---------------------------------------------------------------------------
+# The supervisor loop, end to end.
+# ---------------------------------------------------------------------------
+
+def drive(eng, sup, clock, rid, n_ticks):
+    for _ in range(n_ticks):
+        rid = submit_batch(eng, clock, rid)
+        eng.step(flush=True)
+        sup.tick()
+        clock.t += 1.0
+    return rid
+
+
+class TestSupervisorLoop:
+    def test_requires_solved_plan(self, tiny):
+        g, _, params = tiny
+        eng = CNNServingEngine(g, params, None, batch_size=4,
+                               clock=FakeClock())
+        with pytest.raises(ValueError, match="no deployed assignment"):
+            PlanSupervisor(eng, g)
+
+    def test_shift_flips_plan_deterministically(self, tiny, plans, cache):
+        """The acceptance-criteria loop: injected service shift →
+        inferred calibration → adopted re-solve → compile → atomic swap
+        (exactly one) → healthy probation; after recovery the sticky
+        scale telescopes back to ~1 and the new plan is held inside
+        hysteresis. The 4ms delay floor dominates kernel jitter, so
+        every ratio the loop folds tracks the injected delays."""
+        g, hw, params = tiny
+        pa, _ = plans
+        fp_a = plan_fingerprint(pa)
+        clock = FakeClock()
+        eng = CNNServingEngine(g, params, pa, batch_size=4, clock=clock,
+                               cache=cache, warmup=True)
+        eng.device_delay_s = 0.004
+        swapped = []
+        sup = PlanSupervisor(eng, g,
+                             map_kwargs=dict(hw=hw, use_on_chip=False),
+                             check_every=4, rollback_ticks=3,
+                             on_swap=swapped.append)
+        rid = drive(eng, sup, clock, 0, 8)       # settle + clean baseline
+        assert sup.swaps == 0 and sup.state == MONITOR
+
+        eng.device_delay_s = 0.024               # 6x service shift
+        rid = drive(eng, sup, clock, rid, 24)
+        assert sup.swaps == 1 and sup.rollbacks == 0
+        assert sup.state == MONITOR              # probation passed
+        assert plan_fingerprint(eng.plan) != fp_a
+        assert 3.0 < sup._inferred_scale < 10.0
+        assert len(swapped) == 1 and swapped[0].adopted
+        flipped_fp = plan_fingerprint(eng.plan)
+
+        eng.device_delay_s = 0.004               # recovery
+        drive(eng, sup, clock, rid, 28)
+        assert sup.swaps == 1 and sup.rollbacks == 0
+        # The sticky scale telescopes back to ~1 ...
+        assert 0.5 < sup._inferred_scale < 1.5
+        # ... and the re-solve holds the deployed plan: reverting is
+        # cheaper but inside the 5% gate (TestCalibratedReplan pins it).
+        assert plan_fingerprint(eng.plan) == flipped_fp
+        assert sup.last_replan is not None and not sup.last_replan.adopted
+        assert conserved(eng)
+        assert eng.stats()["plan"] == {"swaps": 1, "rollbacks": 0}
+        st = sup.stats()
+        assert st["state"] == MONITOR and st["swaps"] == 1
+
+    def test_probation_rollback_under_fault_injection(self, tiny, plans,
+                                                      cache):
+        """A swap whose new ladder regresses is rolled back after N
+        measured ticks — and injected fault ticks contribute no probation
+        sample (a fault is not a plan regression), so the rollback
+        verdict is reached on real measurements only."""
+        g, hw, params = tiny
+        pa, _ = plans
+        fp_a = plan_fingerprint(pa)
+        clock = FakeClock()
+        # Tick 6 (first post-swap) fails terminally: probation must skip
+        # it and still reach its verdict from the following ticks.
+        eng = CNNServingEngine(
+            g, params, pa, batch_size=4, clock=clock, cache=cache,
+            warmup=True, max_retries=0,
+            fault_plan=FaultPlan({6: TickFault(failures=5)}))
+        eng.device_delay_s = 0.004
+
+        def regress(_result):
+            # The moment the new plan lands, its ticks run 50x slower —
+            # a hostile deployment the probation window must catch.
+            eng.device_delay_s = 0.2
+        sup = PlanSupervisor(eng, g,
+                             map_kwargs=dict(hw=hw, use_on_chip=False),
+                             check_every=3, rollback_ticks=3,
+                             rollback_factor=5.0, cooldown_checks=2,
+                             calibration_source=lambda:
+                                 TransitionCalibration(default=6.0),
+                             on_swap=regress)
+        rid = 0
+        for _ in range(40):
+            rid = submit_batch(eng, clock, rid)
+            eng.step(flush=True)
+            sup.tick()
+            clock.t += 1.0
+            if sup.rollbacks:
+                break
+        assert sup.swaps == 1 and sup.rollbacks == 1
+        assert plan_fingerprint(eng.plan) == fp_a   # old ladder re-armed
+        assert eng.stats()["plan"] == {"swaps": 1, "rollbacks": 1}
+        assert sup.state == MONITOR
+        assert sup._cooldown == 2                   # no immediate retry
+        assert eng.failed_total == 4                # the faulted tick
+        assert conserved(eng)
+
+    def test_background_compile_swaps_at_tick_boundary(self, tiny, plans,
+                                                       cache):
+        """background=True: the ladder compiles off-thread while serving
+        continues; the swap still lands between ticks on the serving
+        thread, and the result is bitwise-identical to the foreground
+        path (same plan, same cache)."""
+        g, hw, params = tiny
+        pa, pb = plans
+        clock = FakeClock()
+        eng = CNNServingEngine(g, params, pa, batch_size=4, clock=clock,
+                               cache=cache, warmup=True)
+        eng.device_delay_s = 0.004
+        sup = PlanSupervisor(eng, g,
+                             map_kwargs=dict(hw=hw, use_on_chip=False),
+                             check_every=2, rollback_ticks=2,
+                             settle_checks=0, background=True,
+                             calibration_source=lambda:
+                                 TransitionCalibration(default=6.0))
+        rid = 0
+        saw_compiling = False
+        for _ in range(400):
+            rid = submit_batch(eng, clock, rid)
+            eng.step(flush=True)
+            sup.tick()
+            clock.t += 1.0
+            saw_compiling |= sup.state == COMPILING
+            if sup.swaps and sup.state == MONITOR:
+                break
+        assert sup.swaps == 1 and saw_compiling
+        assert plan_fingerprint(eng.plan) == plan_fingerprint(pb)
+        assert sup._compile_thread is None
+        assert conserved(eng)

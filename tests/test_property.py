@@ -106,3 +106,67 @@ def test_pad_to_zero_extends(rows, cols):
     p = pad_to(x, (8, 128))
     assert p.shape == (ceil_to(rows, 8), ceil_to(cols, 128))
     assert float(p.sum()) == rows * cols
+
+
+# --------------------------------------------------------------------------
+# Calibrated re-solve properties (PR 10): determinism + hysteresis
+# stability of the closed-loop replan under measured transition scales.
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def replan_env():
+    import jax  # noqa: F401  (imported for parity with other suites)
+    from repro.cnn.models import vgg16
+    from repro.core.dse import identify_parameters
+    g = vgg16(res=8, scale=0.05)
+    return g, identify_parameters(g)
+
+
+def _calibration(rng, lo=0.5, hi=6.0, jitter=0.0):
+    from repro.core.algorithms import Layout
+    from repro.core.cost_model import TransitionCalibration
+    scales = {}
+    for a in Layout:
+        for b in Layout:
+            s = float(rng.uniform(lo, hi))
+            scales[(a, b)] = s * (1.0 + float(rng.uniform(-jitter, jitter)))
+    return TransitionCalibration(scales=scales,
+                                 default=float(rng.uniform(lo, hi)))
+
+
+@given(seed=st.integers(0, 2 ** 31))
+@settings(max_examples=10, deadline=None)
+def test_calibrated_resolve_is_deterministic(replan_env, seed):
+    """Same graph + same calibration scales ⇒ byte-identical plan
+    fingerprint — the supervisor's re-solve decisions are replayable."""
+    from repro.core.mapper import map_network, plan_fingerprint
+    g, hw = replan_env
+    rng = np.random.default_rng(seed)
+    cal = _calibration(rng)
+    fp = {plan_fingerprint(map_network(g, hw=hw, use_on_chip=False,
+                                       calibration=cal))
+          for _ in range(2)}
+    assert len(fp) == 1
+
+
+@given(seed=st.integers(0, 2 ** 31))
+@settings(max_examples=10, deadline=None)
+def test_sub_hysteresis_scale_perturbation_never_adopts(replan_env, seed):
+    """Per-pair scale noise within 1±2% — under half the 5% adoption
+    hysteresis, so the deployed/candidate cost ratio moves by at most
+    ~2·2% < 5% — must never flip the deployed plan. Without this band
+    the supervisor would flap on measurement noise."""
+    from repro.core.algorithms import Layout
+    from repro.core.cost_model import TransitionCalibration
+    from repro.core.mapper import map_network, replan
+    g, hw = replan_env
+    rng = np.random.default_rng(seed)
+    base_default = float(rng.uniform(0.5, 6.0))
+    base = TransitionCalibration(default=base_default)
+    deployed = map_network(g, hw=hw, use_on_chip=False, calibration=base)
+    noisy = TransitionCalibration(
+        scales={(a, b): base_default * (1.0 + float(rng.uniform(-.02, .02)))
+                for a in Layout for b in Layout},
+        default=base_default)
+    r = replan(g, deployed, calibration=noisy, hw=hw, use_on_chip=False)
+    assert not r.adopted
